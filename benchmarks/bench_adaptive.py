@@ -1,0 +1,39 @@
+"""Framework-side benchmark: adaptive vs fixed gradient accumulation
+(the paper's technique applied to training, DESIGN.md §3.1).
+
+Derived metric: fraction of microbatches saved at equal optimizer-visible
+gradient quality target."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.models import Model
+from repro.optim import AdaptiveAccumConfig, adaptive_accumulate
+
+
+def run() -> None:
+    import repro.configs.smollm_360m as sm
+    cfg = sm.reduced()
+    model = Model(cfg, None)
+    params = model.init(jax.random.key(0))
+    from repro.data import TokenStream
+    stream = TokenStream(vocab=cfg.vocab, seq_len=32, batch=16, seed=0)
+    micro = jax.tree.map(lambda x: x.reshape((8, 2) + x.shape[1:]),
+                         stream.batch_at(jnp.int32(0)))
+
+    def grad_fn(p, b):
+        return jax.value_and_grad(model.train_loss)(p, b)
+
+    acc = AdaptiveAccumConfig(rtol=0.2, min_micro=2, max_micro=8)
+    run_fn = jax.jit(lambda p, m: adaptive_accumulate(grad_fn, p, m, acc)[2])
+    n_used = int(run_fn(params, micro))
+    t = timeit(lambda: run_fn(params, micro), warmup=1, iters=2)
+    emit("adaptive_accum/micro_used", t,
+         f"used={n_used}/8;saved={100*(8-n_used)/8:.0f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: timing, instance set, CSV emission."""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` (blocking on jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def instances():
+    """Synthetic instance set matched to the paper's categories (App. E)."""
+    from repro.graphs import barabasi_albert, erdos_renyi, grid2d
+    return {
+        "er-social-s": lambda: erdos_renyi(300, 1200, seed=0),
+        "ba-hyperlink-s": lambda: barabasi_albert(300, 3, seed=1),
+        "grid-road-s": lambda: grid2d(18, 17),
+        "er-social-m": lambda: erdos_renyi(1000, 5000, seed=2),
+    }

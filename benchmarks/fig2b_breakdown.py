@@ -1,0 +1,31 @@
+"""Fig. 2b analog: preprocessing vs ADS running-time breakdown as ε shrinks.
+
+The paper's point: for small ε the ADS phase dominates, so parallelizing ADS
+is what matters.  We measure both phases of our KADABRA on three instance
+categories for ε ∈ {0.1, 0.05, 0.03}."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, instances, timeit
+from repro.core.frames import FrameStrategy
+from repro.graphs import KadabraParams, preprocess, run_kadabra
+
+
+def run() -> None:
+    for name in ("er-social-s", "grid-road-s", "ba-hyperlink-s"):
+        g = instances()[name]()
+        t_pre = timeit(lambda: preprocess(g, eps=0.05, delta=0.1), iters=2)
+        pre = preprocess(g, eps=0.05, delta=0.1)
+        for eps in (0.1, 0.05, 0.03):
+            params = KadabraParams(eps=eps, delta=0.1, batch=32,
+                                   rounds_per_epoch=4, max_epochs=4000)
+            t_ads = timeit(lambda: run_kadabra(
+                g, params, strategy=FrameStrategy.LOCAL_FRAME, world=1,
+                pre=pre)[0], warmup=1, iters=2)
+            frac = t_ads / (t_ads + t_pre)
+            emit(f"fig2b/{name}/eps={eps}", t_ads,
+                 f"ads_fraction={frac:.2f};preproc_us={t_pre*1e6:.0f}")
+
+
+if __name__ == "__main__":
+    run()

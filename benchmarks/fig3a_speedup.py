@@ -1,0 +1,181 @@
+"""Fig. 3a analog: epoch-based algorithms vs the barrier baseline.
+
+Two complementary measurements (one CPU core cannot show real parallel
+speedup, so we separate the two factors that produce Fig. 3a):
+
+1. **Measured overhead** — wall time per sample of each strategy at W=4
+   virtual workers on CPU.  Differences isolate the synchronization
+   structure (collective count, prefix checks) at identical sample work.
+
+2. **Scaling model** — a discrete-event simulation parameterized by
+   *measured* per-op costs (sample S, reduce R(n,W), check C(n)) replays
+   each strategy's critical path for W = 1..64 and reports the parallel
+   speedup curve.  Model:
+
+   * BARRIER epoch:  K·S_max(W) + R(n,W) + C(n)   (samplers idle in R+C;
+     S_max(W) = max of W iid sample times — straggler effect)
+   * LOCAL epoch:    max(K·S_max(W), R(n,W)) + C(n)   (overlapped reduce)
+   * SHARED epoch:   max(K·S_max(W), R(n/W·…)) + C(n/W) + ε_bit
+   * INDEXED epoch:  max(K·S_max(W), AG(n,W)) + W·C(n)  (prefix checks)
+   * LOCK round:     S_max(W) + R(n,W) + C(n)   (every round)
+
+   The paper's 32-core numbers (local 15.9×, shared 18.1×, indexed 10.8×,
+   OpenMP 6.3×) emerge from the same structure: barrier loses K·(R+C)/K on
+   every epoch; shared wins once R's bandwidth term matters."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from benchmarks.common import emit, instances, timeit
+from repro.core.frames import FrameStrategy
+from repro.graphs import (KadabraParams, frame_template, make_sample_fn,
+                          preprocess, run_kadabra)
+
+
+def measured_overheads():
+    g = instances()["er-social-s"]()
+    pre = preprocess(g, eps=0.05, delta=0.1)
+    out = {}
+    for strat in (FrameStrategy.BARRIER, FrameStrategy.LOCAL_FRAME,
+                  FrameStrategy.SHARED_FRAME, FrameStrategy.INDEXED_FRAME):
+        params = KadabraParams(eps=0.05, delta=0.1, batch=16,
+                               rounds_per_epoch=4, max_epochs=3000)
+        t = timeit(lambda s=strat: run_kadabra(
+            g, params, strategy=s, world=4, pre=pre)[0], warmup=1, iters=2)
+        out[strat.value] = t
+        emit(f"fig3a/measured/{strat.value}/W=4", t, "")
+    base = out["barrier"]
+    for k, v in out.items():
+        if k != "barrier":
+            emit(f"fig3a/measured/{k}_vs_barrier", v,
+                 f"speedup={base/v:.2f}x")
+    return g, pre
+
+
+def simulated_scaling(g, pre, n_events: int = 400, seed: int = 0):
+    """Critical-path replay with measured cost constants."""
+    params = KadabraParams(eps=0.05, delta=0.1, batch=16)
+    sample_fn = make_sample_fn(g, pre, params.batch)
+    tmpl = frame_template(g)
+
+    # measure S (one sampling round), R per element, C per element
+    key = jax.random.key(0)
+    s_cost = timeit(lambda: jax.jit(
+        lambda k: sample_fn(k, None)[0].data)(key), iters=3)
+    n = g.n
+    red = jax.jit(lambda x: jnp.sum(x, 0))
+    r_cost_4 = timeit(lambda: red(jnp.ones((4, n), jnp.int32)), iters=3)
+    from repro.core.stopping import KadabraCondition
+    cond = KadabraCondition(eps=0.05, delta=0.1, omega=pre.omega,
+                            n_vertices=n)
+    from repro.core.frames import StateFrame
+    c_cost = timeit(lambda: jax.jit(
+        lambda d: cond(StateFrame(num=jnp.int32(100), data=d))[0])(
+            jnp.ones((n,), jnp.int32)), iters=3)
+
+    rng = np.random.default_rng(seed)
+    K = 4
+
+    def epoch_time(strategy: str, W: int) -> float:
+        # iid lognormal round times (graph BFS variance); straggler = max
+        rounds = s_cost * rng.lognormal(0.0, 0.25, size=(n_events, W, K))
+        s_epoch_max = rounds.sum(2).max(1)    # barrier once per epoch
+        R = r_cost_4 / 4 * W                  # linear-in-W accumulation (§3.3)
+        C = c_cost
+        if strategy == "barrier":
+            t = s_epoch_max + R + C
+        elif strategy == "local":
+            t = np.maximum(s_epoch_max, R) + C
+        elif strategy == "shared":
+            t = np.maximum(s_epoch_max, R / W * 2) + C / W + 1e-6
+        elif strategy == "indexed":
+            t = np.maximum(s_epoch_max, R) + min(W, 8) * C  # prefix checks
+        elif strategy == "lock":
+            # reduce + check after EVERY round, each round barriered
+            t = (rounds.max(1) + R + C).sum(1)
+        else:
+            raise ValueError(strategy)
+        return float(np.mean(t))
+
+    # sequential reference: W=1 barrier without reduce
+    seq = epoch_time("barrier", 1)
+    print("# fig3a simulated parallel speedup (samples/s vs W=1 barrier)")
+    header = ["W"] + ["lock", "barrier", "local", "shared", "indexed"]
+    print("#", " ".join(f"{h:>8s}" for h in header))
+    for W in (1, 2, 4, 8, 16, 32, 64):
+        row = [f"{W:>8d}"]
+        for strat in header[1:]:
+            # throughput = W·K samples per epoch_time; speedup vs seq
+            thr = W * 1.0 / epoch_time(strat, W)
+            thr_seq = 1.0 / seq
+            row.append(f"{thr/thr_seq:8.2f}")
+        print("#", " ".join(row))
+        if W == 32:
+            for strat in ("barrier", "local", "shared", "indexed"):
+                thr = W / epoch_time(strat, W) * seq
+                emit(f"fig3a/simulated/{strat}/W=32",
+                     epoch_time(strat, W), f"speedup={thr:.1f}x")
+
+
+def paper_platform_model():
+    """Replay at the PAPER's scale (36-core Xeon, wikipedia-class graphs):
+    n = 3.6e6 vertices, sample = one BFS ≈ 2 ms, frame = 4n bytes,
+    thread-0 accumulation R(T) = T·n·4B at ~8 GB/s (§3.3: Θ(T·n)),
+    check C = f,g pass over n ≈ 3 ms, memory-bandwidth ceiling on sampling
+    beyond ~14 threads (§4: "nearly ideal until 16 cores"), coordinator
+    cadence N₀ = N/T^ξ with N=1000, ξ=1.33 (App. C.2/C.3)."""
+    import numpy as np
+    s1 = 2.0e-3
+    n = 3.6e6
+    C = 3.0e-3
+    r_bw = 8e9
+    R = lambda T: T * n * 4 / r_bw
+    RS = lambda T: 2 * n * 4 / r_bw          # reduce-scatter: size-n, not T·n
+    straggler = lambda T: 1.0 + 0.18 * np.log2(max(T, 1))
+    bw = lambda T: 1.0 + max(0.0, (T - 14) / 14) * 0.9  # sampling slowdown
+
+    def epoch(strategy, T):
+        N0 = max(1, round(1000 / T ** 1.33))     # samples/thread/epoch
+        samp = N0 * s1 * bw(T) * straggler(T)
+        if strategy == "lock":                   # original: N=11 cadence,
+            k = max(1, round(11 / T))            # lock serializes update+check
+            return (k * s1 * bw(T) * straggler(T) + (R(T) + C)) * (N0 / max(k, 1)), N0 * T
+        if strategy == "barrier":
+            return samp + R(T) + C, N0 * T
+        if strategy == "local":
+            return max(samp, R(T)) + C, N0 * T
+        if strategy == "shared":
+            return max(samp, RS(T)) + C / T + 1e-4, N0 * T
+        if strategy == "indexed":
+            # fixed samples/SF ⇒ stale buffered SFs checked in order: extra
+            # C per buffered frame + bandwidth of the gather ≈ local's R
+            return max(samp * 1.1, R(T)) + min(T, 8) * C, N0 * T
+        raise ValueError(strategy)
+
+    seq_rate = 1.0 / (1000 * s1 + C) * 1000      # samples/s sequential
+    print("# fig3a paper-platform model: parallel speedup (samples/s vs seq)")
+    print("#        W     lock  barrier    local   shared  indexed")
+    for T in (1, 2, 4, 8, 16, 32):
+        row = [f"{T:>8d}"]
+        for strat in ("lock", "barrier", "local", "shared", "indexed"):
+            t, samples = epoch(strat, T)
+            row.append(f"{samples / t / seq_rate:8.1f}")
+        print("# " + " ".join(row))
+        if T == 32:
+            for strat in ("barrier", "local", "shared", "indexed"):
+                t, samples = epoch(strat, T)
+                emit(f"fig3a/paper_model/{strat}/W=32", t,
+                     f"speedup={samples / t / seq_rate:.1f}x")
+
+
+def run() -> None:
+    g, pre = measured_overheads()
+    simulated_scaling(g, pre)
+    paper_platform_model()
+
+
+if __name__ == "__main__":
+    run()

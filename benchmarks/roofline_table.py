@@ -1,0 +1,62 @@
+"""§Roofline table: aggregates the dry-run JSONs (benchmarks/results/dryrun)
+into the per-(arch × shape) three-term table for EXPERIMENTS.md.  No
+compilation happens here — run ``benchmarks/run_dryrun_all.sh`` first."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def rows(mesh: str = "16x16"):
+    out = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
+        if mesh == "16x16" and "2x16x16" in f:
+            continue
+        out.append(json.load(open(f)))
+    return out
+
+
+def run() -> None:
+    n_ok = n_skip = n_err = 0
+    for r in rows():
+        cell = f"{r['arch']}/{r['shape']}"
+        if not r.get("applicable"):
+            n_skip += 1
+            emit(f"roofline/{cell}", 0.0, "skipped")
+            continue
+        if "error" in r:
+            n_err += 1
+            emit(f"roofline/{cell}", 0.0, f"ERROR")
+            continue
+        n_ok += 1
+        t = r.get("roofline", {})
+        m = r["memory"]
+        dom = t.get("dominant", "?")
+        # kernel-path (deploy) memory cross-check — see analysis/analytic.py
+        try:
+            from repro.analysis.analytic import kernel_memory_s
+            from repro.models import SHAPES, get_config
+            mem_k = kernel_memory_s(get_config(r["arch"]),
+                                    SHAPES[r["shape"]], r.get("chips", 256))
+        except Exception:
+            mem_k = 0.0
+        emit(f"roofline/{cell}",
+             max(t.get("compute_s", 0), t.get("memory_s", 0),
+                 t.get("collective_s", 0)),
+             f"dom={dom};compute_s={t.get('compute_s', 0):.4f};"
+             f"memory_s={t.get('memory_s', 0):.4f};"
+             f"mem_s_kernel={mem_k:.4f};"
+             f"collective_s={t.get('collective_s', 0):.4f};"
+             f"useful={t.get('useful_ratio', 0):.2f};"
+             f"peak_GB={m['peak_bytes']/2**30:.1f}")
+    print(f"# roofline table: {n_ok} cells, {n_skip} skips, {n_err} errors")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3a,...]
+
+Emits ``name,us_per_call,derived`` CSV rows (plus ``#`` commentary lines).
+
+| module               | paper artifact                                  |
+|----------------------|--------------------------------------------------|
+| fig2a_baseline       | Fig. 2a — barrier baseline vs lock analog        |
+| fig2b_breakdown      | Fig. 2b — preprocessing/ADS split vs ε           |
+| fig3a_speedup        | Fig. 3a — epoch-based vs barrier (meas. + model) |
+| fig3b_fsweep         | Fig. 3b — shared-frame F sweep                   |
+| tables23_instances   | Tables 2–3 — per-instance absolute times         |
+| roofline_table       | §Roofline — 40-cell dry-run aggregate            |
+| bench_adaptive       | §3.1 (ours) — adaptive grad-accum savings        |
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import subprocess
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig2a_baseline",
+    "fig2b_breakdown",
+    "fig3a_speedup",
+    "fig3b_fsweep",
+    "tables23_instances",
+    "roofline_table",
+    "bench_adaptive",
+]
+
+
+def _run_inline(name: str) -> None:
+    mod = importlib.import_module(f"benchmarks.{name}")
+    mod.run()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark modules")
+    ap.add_argument("--inline", action="store_true",
+                    help="run in-process (default: one subprocess per module"
+                         " — isolates XLA jit state between suites)")
+    args = ap.parse_args()
+    only = {m.strip() for m in args.only.split(",") if m.strip()}
+    print("name,us_per_call,derived")
+    failed = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            if args.inline:
+                _run_inline(name)
+            else:
+                r = subprocess.run(
+                    [sys.executable, "-m", "benchmarks.run", "--inline",
+                     "--only", name],
+                    capture_output=True, text=True, timeout=1800,
+                    env=dict(os.environ))
+                # forward CSV rows, drop the child's header/section lines
+                for line in r.stdout.splitlines():
+                    if line.startswith(("name,us_per_call", "# ---",
+                                        "# all benchmarks")):
+                        continue
+                    print(line)
+                if r.returncode != 0:
+                    sys.stderr.write(r.stderr[-3000:])
+                    failed.append(name)
+                    continue
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}")
+        return 1
+    print("# all benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

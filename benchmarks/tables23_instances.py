@@ -1,0 +1,40 @@
+"""Tables 2–3 analog: absolute ADS runtimes per instance × strategy.
+
+The paper reports per-instance absolute seconds for OMP/L/S/I at 1–32
+cores; we report wall seconds for the four strategies at W ∈ {1, 4} virtual
+workers on the synthetic instance set (categories matched to App. E)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, instances, timeit
+from repro.core.frames import FrameStrategy
+from repro.graphs import KadabraParams, preprocess, run_kadabra
+
+STRATS = {
+    "OMP": FrameStrategy.BARRIER,
+    "L": FrameStrategy.LOCAL_FRAME,
+    "S": FrameStrategy.SHARED_FRAME,
+    "I": FrameStrategy.INDEXED_FRAME,
+}
+
+
+def run() -> None:
+    for name, make in instances().items():
+        if name.endswith("-m"):
+            continue  # keep the sweep fast; -m covered in fig2 benches
+        g = make()
+        pre = preprocess(g, eps=0.05, delta=0.1)
+        params = KadabraParams(eps=0.05, delta=0.1, batch=16,
+                               rounds_per_epoch=4, max_epochs=3000)
+        for label, strat in STRATS.items():
+            for world in (1, 4):
+                if strat == FrameStrategy.SHARED_FRAME and world == 1:
+                    continue
+                t = timeit(lambda s=strat, w=world: run_kadabra(
+                    g, params, strategy=s, world=w, pre=pre)[0],
+                    warmup=1, iters=2)
+                emit(f"tables23/{name}/{label}/W={world}", t, "")
+
+
+if __name__ == "__main__":
+    run()

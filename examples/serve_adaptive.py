@@ -1,0 +1,27 @@
+"""Serving example: batched generation + the ADS engine estimating a serving
+metric to (ε,δ) — "how good is this checkpoint?" answered with adaptive
+sampling instead of a fixed eval sweep.
+
+    PYTHONPATH=src python examples/serve_adaptive.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main() -> None:
+    print("[example] batched greedy generation:")
+    serve_mod.main(["--arch", "smollm-360m-reduced", "--batch", "4",
+                    "--prompt-len", "16", "--gen", "16"])
+    print("\n[example] adaptive (ε,δ) metric estimation:")
+    serve_mod.main(["--arch", "smollm-360m-reduced", "--adaptive-eval",
+                    "--eps", "0.25", "--delta", "0.1", "--seq", "32",
+                    "--batch", "4"])
+
+
+if __name__ == "__main__":
+    main()

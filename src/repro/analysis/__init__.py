@@ -1,0 +1,5 @@
+from .hlo import collective_bytes, parse_shape_bytes
+from .roofline import RooflineTerms, V5E, roofline_terms, model_flops
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "RooflineTerms", "V5E",
+           "roofline_terms", "model_flops"]

@@ -1,0 +1,84 @@
+"""Analytic (kernel-path) roofline terms — the deploy-target cross-check.
+
+``cost_analysis()`` on XLA:CPU reports *pre-fusion-cluster* "bytes accessed":
+the f32 attention-score blocks that the Pallas flash kernel keeps in VMEM
+are counted as HBM traffic, inflating the memory term by up to an order of
+magnitude (§Perf).  This module computes a closed-form HBM-traffic estimate
+for the kernelized TPU execution:
+
+* weights: read fwd + re-read (remat) + read bwd + grad write (f32) +
+  optimizer moments r/w (train); read once (prefill/decode)
+* activations: ~6 residual-stream-sized tensors r/w per layer per pass
+* attention: q/k/v/o traffic + KV streamed once per Q block (flash)
+* SSM/RG: recurrence inputs/outputs (a, b, h) per layer
+* logits/CE and embedding traffic
+* decode: full cache read + one-slot write per emitted token
+
+Used for the ``mem_s_kernel`` column of EXPERIMENTS.md §Roofline; dominance
+calls in §Perf quote both terms.
+"""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                   model_axis: int = 16) -> float:
+    """Estimated HBM bytes per device per step (kernel-path execution)."""
+    P = cfg.param_count()
+    L = cfg.n_layers + (cfg.enc_layers if cfg.family == "encdec" else 0)
+    d = cfg.d_model
+    V = cfg.padded_vocab
+
+    if shape.kind == "decode":
+        B_loc = max(shape.global_batch // (chips // model_axis), 1)
+        total = P / chips * BF16                      # weights read once
+        # KV cache (or SSM state) read per token
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * B_loc * cfg.dinner * cfg.ssm_state * F32
+        else:
+            sc = min(shape.seq_len, cfg.window or shape.seq_len)
+            sc_loc = sc / model_axis
+            cache = cfg.n_layers * B_loc * sc_loc * cfg.n_kv * cfg.hd * BF16 * 2
+        total += cache * 2 + B_loc * V / chips * BF16  # read+write + logits
+        return total
+
+    tokens_loc = shape.seq_len * shape.global_batch / (chips // model_axis)
+    # model-parallel shards see 1/model_axis of head/ffn work per token
+    tok_work = tokens_loc / model_axis
+
+    passes = 3.0 if shape.kind == "train" else 1.0   # fwd + refwd + bwd
+    # weights
+    w = P / chips * BF16 * passes
+    if shape.kind == "train":
+        w += P / chips * (F32 + 3 * F32)             # grads + moments r/w
+    # activations: ~6 d-sized tensors r/w per layer per pass
+    act = L * tokens_loc * d * BF16 * 6 * passes
+    # attention / recurrence
+    if cfg.family == "ssm":
+        seqmix = cfg.n_layers * tokens_loc * cfg.dinner / model_axis \
+            * cfg.ssm_state * F32 * 3 * passes       # a, b, h
+    else:
+        H_loc = max(cfg.n_heads / model_axis, 1)
+        qkvo = (2 * H_loc + 2 * cfg.n_kv) * cfg.hd
+        nq = max(shape.seq_len // cfg.attn_chunk, 1)
+        window = cfg.window or (cfg.local_window if cfg.family == "hybrid"
+                                else 0)
+        kv_frac = min(1.0, window / shape.seq_len) if window else 1.0
+        stream = cfg.n_kv * cfg.hd * (nq / 2) * kv_frac  # flash KV re-reads
+        seqmix = cfg.n_layers * tokens_loc * (qkvo + stream) * BF16 * passes
+    # logits + CE (+ embedding gather)
+    logits = tokens_loc * V / model_axis * (BF16 + F32) * passes \
+        if shape.kind == "train" else \
+        shape.global_batch / max(chips // model_axis, 1) * V * BF16
+    emb = tokens_loc * d * BF16 * 2
+    return w + act + seqmix + logits + emb
+
+
+def kernel_memory_s(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                    hbm_bw: float = 819e9) -> float:
+    return analytic_bytes(cfg, shape, chips) / hbm_bw

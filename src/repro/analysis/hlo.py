@@ -1,0 +1,86 @@
+"""HLO-text analysis: collective operand bytes per class.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module text and sum operand sizes of every
+
+    all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute   (+ their async -start forms)
+
+Loop caveat: instructions inside a ``while`` body are executed trip-count
+times but appear once in the text.  The roofline module corrects for this by
+**layer-differencing** (compile L=1 and L=2 unrolled variants; see
+DESIGN.md §6) instead of trying to recover trip counts from HLO.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{}\s]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_OP_NAMES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def parse_shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[shape] literal in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-class operand bytes of collectives in the (per-device) module.
+
+    ``-done`` ops are skipped (the matching ``-start`` already counted).
+    Returns {op_name: bytes, "total": bytes, "count": n_ops}.
+    """
+    out: Dict[str, int] = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "-done(" in line:
+            continue
+        m = None
+        for op in _OP_NAMES:
+            idx = line.find(f" {op}(")
+            if idx < 0:
+                idx = line.find(f" {op}-start(")
+            if idx >= 0:
+                m = (op, idx)
+                break
+        if m is None:
+            continue
+        op, idx = m
+        # operand shapes appear inside the parens following the op name
+        paren = line.find("(", idx)
+        operands = line[paren:line.find(")", paren) + 1] if paren >= 0 else ""
+        b = parse_shape_bytes(operands)
+        if b == 0:
+            # operands printed without shapes (older form): fall back to the
+            # result shape on the lhs
+            b = parse_shape_bytes(line[:idx])
+        out[op] += b
+        count += 1
+    out["total"] = sum(out[o] for o in _OP_NAMES if o in out)
+    out["count"] = count
+    return dict(out)

@@ -1,0 +1,99 @@
+"""Roofline terms from compiled artifacts (DESIGN.md §6).
+
+TPU v5e per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+HLO modules are per-device (GSPMD), so
+
+    compute    = flops_per_device    / 197e12     [s]
+    memory     = bytes_per_device    / 819e9      [s]
+    collective = coll_bytes_per_dev  / 50e9       [s]
+
+Layer-differencing correction: ``cost_analysis()`` counts a scan (while-loop)
+body once, so per-cell costs are derived from two small *unrolled* compiles:
+
+    per_layer = cost(L=2, unrolled) − cost(L=1, unrolled)
+    total     = cost(L=1, unrolled) + (n_layers − 1) · per_layer
+
+(enc-dec gets a third variant so encoder and decoder layers are differenced
+independently).  Memory fit always comes from the full scanned compile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    link_bw: float           # bytes/s per link
+
+
+V5E = HardwareSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                   link_bw=50e9)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    chips: int
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops_total: float = 0.0
+    useful_ratio: float = 0.0     # MODEL_FLOPS / (flops_per_dev · chips)
+
+    def finalize(self, hw: HardwareSpec = V5E) -> "RooflineTerms":
+        self.compute_s = self.flops_per_dev / hw.peak_flops
+        self.memory_s = self.bytes_per_dev / hw.hbm_bw
+        self.collective_s = self.coll_bytes_per_dev / hw.link_bw
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        hlo_total = self.flops_per_dev * self.chips
+        self.useful_ratio = (self.model_flops_total / hlo_total
+                             if hlo_total else 0.0)
+        return self
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Closed-form MODEL_FLOPS: 6·N·D (train), 2·N·D (prefill),
+    2·N·B (decode, per emitted token), N = active params (MoE-aware)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(*, flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, chips: int,
+                   cfg: Optional[ModelConfig] = None,
+                   shape: Optional[ShapeConfig] = None,
+                   hw: HardwareSpec = V5E) -> RooflineTerms:
+    mf = model_flops(cfg, shape) if cfg is not None and shape is not None else 0.0
+    return RooflineTerms(flops_per_dev=flops_per_dev,
+                         bytes_per_dev=bytes_per_dev,
+                         coll_bytes_per_dev=coll_bytes_per_dev,
+                         chips=chips, model_flops_total=mf).finalize(hw)
+
+
+def combine_layer_diff(base: Dict[str, float], two: Dict[str, float],
+                       n_layers: int) -> Dict[str, float]:
+    """total(L) = base + (L−1)·(two − base) for each cost key."""
+    out = {}
+    for k in base:
+        per_layer = two.get(k, 0.0) - base.get(k, 0.0)
+        out[k] = base[k] + max(per_layer, 0.0) * (n_layers - 1)
+    return out

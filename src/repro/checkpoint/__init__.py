@@ -1,0 +1,4 @@
+from .manager import CheckpointManager, save_checkpoint, load_checkpoint, latest_step
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "latest_step"]

@@ -1,0 +1,234 @@
+"""Fault-tolerant, elastic checkpointing (DESIGN.md §3.3).
+
+Format: one directory per step, containing
+
+    manifest.json   — tree structure, per-leaf {shape, dtype, chunks:
+                      [{axis0 start/stop, file, crc32}]}, mesh shape, data
+                      cursor, PRNG key, "complete" marker written LAST
+    <leaf>.<i>.npy  — global-slice chunks (axis-0 partitioned)
+
+Chunks are keyed by **global slice indices**, not device ids, so a restore
+may target a *different* mesh (elastic up/down-scaling): the loader
+reassembles the global array and ``device_put``s it with the new sharding.
+On a real multi-host fleet each host writes the chunks it owns; the format
+is host-count-independent by construction.
+
+Durability: writes go to ``<dir>.tmp`` then ``os.rename`` (atomic on POSIX);
+``CheckpointManager`` keeps the last *k* steps and can write asynchronously
+(snapshot to host memory synchronously, disk I/O on a worker thread — the
+training loop never blocks on disk).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+# numpy can't construct ml_dtypes dtypes from strings ("bfloat16"); store
+# such arrays as raw uint views and record the logical dtype in the manifest
+try:
+    import ml_dtypes
+    _EXT_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+                   "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+                   "float8_e5m2": ml_dtypes.float8_e5m2}
+except ImportError:  # pragma: no cover
+    _EXT_DTYPES = {}
+_RAW_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+             "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _RAW_VIEW:
+        return arr.view(_RAW_VIEW[name]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[dtype_name])
+    return arr.astype(dtype_name)
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(_path_str(p) for p in path) or "leaf"
+        out.append((name, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(tree: PyTree, directory: str | Path, step: int, *,
+                    meta: Optional[Dict] = None, chunks: int = 4) -> Path:
+    """Synchronous atomic save. Returns the final step directory."""
+    directory = Path(directory)
+    final = directory / f"step_{step:010d}"
+    tmp = directory / f".tmp_step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest: Dict[str, Any] = {"step": step, "meta": meta or {},
+                                "leaves": {}, "format": "repro-ckpt-v1"}
+    for name, leaf in _flatten_with_paths(tree):
+        arr, dtype_name = _encode(np.asarray(leaf))
+        safe = name.replace(_SEP, "__")
+        n0 = max(arr.shape[0], 1) if arr.ndim else 1
+        k = min(chunks, n0) if arr.ndim else 1
+        bounds = np.linspace(0, n0, k + 1, dtype=np.int64)
+        chunk_recs = []
+        for i in range(k):
+            lo, hi = int(bounds[i]), int(bounds[i + 1])
+            part = arr[lo:hi] if arr.ndim else arr
+            fn = f"{safe}.{i}.npy"
+            with open(tmp / fn, "wb") as f:
+                np.save(f, part)
+            crc = zlib.crc32((tmp / fn).read_bytes())
+            chunk_recs.append({"start": lo, "stop": hi, "file": fn,
+                               "crc32": crc})
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape), "dtype": dtype_name,
+            "chunks": chunk_recs,
+        }
+    manifest["complete"] = True
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(tree_like: PyTree, directory: str | Path, step: int, *,
+                    shardings: Optional[PyTree] = None,
+                    verify_crc: bool = True) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``tree_like`` (SDS or arrays); optional
+    ``shardings`` pytree re-distributes onto ANY mesh (elastic restore)."""
+    d = Path(directory) / f"step_{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    assert manifest.get("complete"), f"incomplete checkpoint {d}"
+    leaves = dict(_flatten_with_paths(tree_like))
+    shard_leaves = dict(_flatten_with_paths(shardings)) if shardings else {}
+    out: Dict[str, Any] = {}
+    for name, rec in manifest["leaves"].items():
+        parts = []
+        for c in rec["chunks"]:
+            raw = (d / c["file"]).read_bytes()
+            if verify_crc:
+                crc = zlib.crc32(raw)
+                if crc != c["crc32"]:
+                    raise IOError(f"CRC mismatch in {d / c['file']}")
+            import io
+            parts.append(np.load(io.BytesIO(raw)))
+        arr = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        arr = _decode(arr.reshape(rec["shape"]), rec["dtype"])
+        sh = shard_leaves.get(name)
+        out[name] = jax.device_put(arr, sh) if sh is not None else \
+            jax.numpy.asarray(arr)
+    # rebuild the pytree in original structure
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    vals = []
+    for path, _ in flat:
+        name = _SEP.join(_path_str(p) for p in path) or "leaf"
+        if name not in out:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        vals.append(out[name])
+    return jax.tree_util.tree_unflatten(treedef, vals), manifest["meta"]
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.name.startswith("step_") and (p / "manifest.json").exists():
+            try:
+                m = json.loads((p / "manifest.json").read_text())
+                if m.get("complete"):
+                    steps.append(int(p.name.split("_")[1]))
+            except Exception:
+                continue
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async keep-last-k manager for the host training loop."""
+
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_write: bool = True, chunks: int = 4):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_write = async_write
+        self.chunks = chunks
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, tree: PyTree, step: int, meta: Optional[Dict] = None
+             ) -> None:
+        self.wait()  # one in-flight save at a time
+        # snapshot to host memory synchronously (device buffers may be
+        # donated/overwritten by the next step)
+        snap = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(snap, self.directory, step, meta=meta,
+                                chunks=self.chunks)
+                self._prune()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        if self.async_write:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error:
+                err, self._error = self._error, None
+                raise err
+
+    def restore_latest(self, tree_like: PyTree,
+                       shardings: Optional[PyTree] = None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        tree, meta = load_checkpoint(tree_like, self.directory, step,
+                                     shardings=shardings)
+        return step, tree, meta
+
+    def _prune(self) -> None:
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.directory.iterdir()
+            if p.name.startswith("step_"))
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.directory / f"step_{s:010d}",
+                          ignore_errors=True)

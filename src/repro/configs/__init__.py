@@ -1,0 +1,5 @@
+"""One module per assigned architecture (+ the paper's own KADABRA config).
+
+Each module registers a :class:`repro.models.ModelConfig` with the exact
+published dimensions, plus a ``reduced()`` factory for CPU smoke tests.
+"""

@@ -1,0 +1,17 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 (attn-free), vocab=65024,
+ssm_state=16, mamba1 arch [arXiv:2410.05355]."""
+import dataclasses
+
+from repro.models import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=1, n_kv=1, d_ff=0, vocab=65024,
+    ssm_state=16, ssm_conv=4, grad_accum=4,  # d_inner=2·d=8192, dt_rank=256 (defaults)
+))
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="falcon-mamba-7b-reduced", n_layers=2, d_model=64,
+        vocab=256, ssm_state=4, remat="none")

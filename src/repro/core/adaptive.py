@@ -1,0 +1,83 @@
+"""Generic adaptive-sampling driver — the public API of the paper's
+Algorithm 1/2 (convenience facade over :mod:`repro.core.epoch`).
+
+    result = run_adaptive(
+        sample_fn,                # SAMPLE(): key, carry -> (StateFrame, carry)
+        check_fn,                 # CHECKFORSTOP(): StateFrame -> (bool, aux)
+        template=jnp.zeros(n),    # shape of frame.data
+        strategy="local",         # lock|barrier|local|shared|indexed
+        world=8,                  # parallel workers (vmap-virtual or mesh)
+        rounds_per_epoch=4,       # paper's N (App. C.2), in rounds
+        xi=1.33,                  # App. C.3 cadence heuristic
+    )
+
+Returns an :class:`AdaptiveResult` with the consistent final state, the
+estimate count τ, and termination statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .epoch import EpochConfig, EpochState, rounds_for_world, run_sharded, \
+    run_virtual, run_worker
+from .frames import FrameStrategy, StateFrame, sequential_collectives
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveResult:
+    data: np.ndarray        # consistent accumulated data (full, unsharded)
+    num: int                # τ — samples in the checked state
+    stopped: bool
+    epochs: int
+    stop_epoch: int
+    aux: PyTree
+    state: EpochState
+
+
+def run_adaptive(sample_fn, check_fn, template: PyTree, *,
+                 strategy: str | FrameStrategy = "local",
+                 world: int = 1, seed: int = 0, rounds_per_epoch: int = 4,
+                 max_epochs: int = 10_000, xi: float = 0.0,
+                 round_batch: int = 1, init_carry: PyTree = None,
+                 mesh=None, mesh_axis: Optional[str] = None,
+                 frame_shards: int = 0) -> AdaptiveResult:
+    strat = FrameStrategy(strategy) if isinstance(strategy, str) else strategy
+    rounds = rounds_for_world(rounds_per_epoch * round_batch, round_batch,
+                              world, xi) if xi else rounds_per_epoch
+    cfg = EpochConfig(strategy=strat, rounds_per_epoch=rounds,
+                      max_epochs=max_epochs, xi=xi)
+    if mesh is not None and mesh_axis is not None:
+        st = run_sharded(sample_fn, check_fn, template, init_carry, seed,
+                         mesh, mesh_axis, cfg)
+    elif world == 1:
+        st = run_worker(sample_fn, check_fn, template, init_carry,
+                        jax.random.key(seed), cfg,
+                        colls=sequential_collectives(),
+                        seed_scalar=jnp.asarray(seed, jnp.uint32),
+                        worker_id=jnp.int32(0))
+    else:
+        st = run_virtual(sample_fn, check_fn, template, init_carry, seed,
+                         world, cfg, frame_shards=frame_shards)
+
+    def first(x):
+        a = np.asarray(x)
+        return a[0] if (world > 1 and a.ndim >= 1 and a.shape[0] == world) \
+            else a
+
+    if strat == FrameStrategy.SHARED_FRAME and world > 1:
+        data = np.asarray(st.total.data).reshape(-1)
+    else:
+        data = np.asarray(jax.tree.map(first, st.total.data))
+    return AdaptiveResult(
+        data=data, num=int(first(st.total.num)),
+        stopped=bool(first(st.stop)), epochs=int(first(st.epoch)),
+        stop_epoch=int(first(st.stop_epoch)),
+        aux=jax.tree.map(first, st.aux), state=st)

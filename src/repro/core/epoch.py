@@ -1,0 +1,350 @@
+"""Epoch-based adaptive-sampling engine (the paper's Algorithm 2, TPU-native).
+
+One function, :func:`run_worker`, implements the per-worker program for all
+five strategies of :class:`~repro.core.frames.FrameStrategy`.  It is written
+against the :class:`~repro.core.frames.Collectives` abstraction, so the same
+code executes
+
+* sequentially (``sequential_collectives()``, W=1 — the correctness oracle),
+* with **virtual workers** under ``vmap(..., axis_name=...)`` (CPU tests and
+  the paper-figure benchmarks), and
+* with **real devices** under ``shard_map`` on a mesh axis (production).
+
+Strategy semantics (see DESIGN.md §2 for the shared-memory → TPU mapping):
+
+LOCK          reduce + check after *every* sampling round; the decision is a
+              data dependency of the next round (original-KADABRA analog).
+BARRIER       reduce + check after K rounds; collective still on the critical
+              path between epochs ("OpenMP baseline", paper §2.4).
+LOCAL_FRAME   the paper's §3.2: the collective consumes the *previous* epoch's
+              delta frame, so inside one loop body the reduction of epoch e−1
+              and the sampling of epoch e have no data dependency — XLA's
+              latency-hiding scheduler can overlap them (async all-reduce on
+              TPU).  The stop decision therefore lags one epoch: exactly the
+              paper's "termination latency" (App. C.3).
+SHARED_FRAME  like LOCAL_FRAME but the reduction is a *reduce-scatter*: each
+              worker keeps only its 1/W shard of the consistent state (Θ(n/W)
+              memory — the paper's Θ(1)-per-thread trade-off with F = W) and
+              evaluates the stopping condition on its shard; the 1-bit
+              verdicts are AND-combined with a tiny all-reduce.  Hardware
+              accumulation in the reduce-scatter replaces fetch-add.
+INDEXED_FRAME deterministic (paper §D.2): frame *m* (= epoch·W + worker) is a
+              pure function of ``fold_in(seed, m)`` with a fixed number of
+              samples; the checker consumes frames **in index order** and
+              stops at the first prefix satisfying the condition ⇒ the result
+              is bit-identical for every worker count W.
+
+Consistency (Prop. 1): every state the condition is evaluated on equals
+``⊕`` over an *integral* set of per-worker sample prefixes — the proof
+obligation ("all stores visible before accumulation") holds by SSA data
+dependence: a frame snapshot is a value, not a memory location.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .frames import (Collectives, FrameStrategy, StateFrame, combine,
+                     sequential_collectives, zeros_like_frame)
+
+PyTree = Any
+# sample_fn(key, carry) -> (delta: StateFrame, carry')   — one sampling round
+SampleFn = Callable[[jax.Array, PyTree], Tuple[StateFrame, PyTree]]
+# check_fn(total: StateFrame) -> (stop: bool scalar, aux pytree)
+CheckFn = Callable[[StateFrame], Tuple[jax.Array, PyTree]]
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochConfig:
+    strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+    rounds_per_epoch: int = 8     # K sampling rounds between checks (paper's N)
+    max_epochs: int = 1_000
+    # App. C.3 heuristic: coordinator cadence N₀ = N / W^ξ. Applied via
+    # :func:`rounds_for_world` when building per-run configs.
+    xi: float = 0.0
+
+
+def rounds_for_world(n_samples_between_checks: int, round_batch: int,
+                     world: int, xi: float) -> int:
+    """Paper App. C.3: check after N₀ = N / W^ξ samples (per worker)."""
+    n0 = n_samples_between_checks / max(1.0, float(world) ** xi)
+    return max(1, int(round(n0 / max(1, round_batch))))
+
+
+class EpochState(NamedTuple):
+    key: jax.Array
+    carry: PyTree
+    total: StateFrame       # consistent reduced state (shard for SHARED)
+    pending: StateFrame     # this worker's delta of the epoch just finished
+    stop: jax.Array         # bool scalar
+    aux: PyTree
+    epoch: jax.Array        # int32
+    stop_epoch: jax.Array   # epoch at which stop was first seen (for latency stats)
+
+
+def _sample_epoch(sample_fn: SampleFn, template: PyTree, rounds: int,
+                  key: jax.Array, carry: PyTree) -> Tuple[StateFrame, PyTree]:
+    """K sampling rounds accumulated into a fresh delta frame."""
+
+    def body(st, k):
+        frame, carry = st
+        delta, carry = sample_fn(k, carry)
+        return (combine(frame, delta), carry), None
+
+    keys = jax.random.split(key, rounds)
+    (frame, carry), _ = jax.lax.scan(body, (zeros_like_frame(template), carry), keys)
+    return frame, carry
+
+
+def run_worker(
+    sample_fn: SampleFn,
+    check_fn: CheckFn,
+    template: PyTree,
+    init_carry: PyTree,
+    key: jax.Array,
+    cfg: EpochConfig,
+    colls: Optional[Collectives] = None,
+    aux_template: Optional[PyTree] = None,
+    seed_scalar: Optional[jax.Array] = None,
+    worker_id: Optional[jax.Array] = None,
+) -> EpochState:
+    """Run the adaptive-sampling loop for one (SPMD) worker.
+
+    ``template`` — pytree with the shape/dtype of ``frame.data`` (for SHARED
+    strategies this is the *full* frame; the engine keeps the sharded total).
+    ``aux_template`` — shape of check aux (obtained via ``jax.eval_shape`` if
+    omitted).
+    ``seed_scalar``/``worker_id`` — required for INDEXED_FRAME.
+    """
+    colls = colls or sequential_collectives()
+    strat = cfg.strategy
+    W = colls.world
+
+    F = colls.frame_shards or W
+    if aux_template is None:
+        zf = zeros_like_frame(template)
+        if strat == FrameStrategy.SHARED_FRAME and colls.scatter_frames is not None:
+            zf = _shard_zeros(zf, F)
+        _, aux_template = jax.eval_shape(check_fn, zf)
+    zero_aux = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aux_template)
+
+    if strat == FrameStrategy.SHARED_FRAME:
+        total0 = _shard_zeros(zeros_like_frame(template), F)
+    else:
+        total0 = zeros_like_frame(template)
+
+    state0 = EpochState(
+        key=key, carry=init_carry, total=total0,
+        pending=zeros_like_frame(template),
+        stop=jnp.zeros((), bool), aux=zero_aux,
+        epoch=jnp.zeros((), jnp.int32), stop_epoch=jnp.zeros((), jnp.int32))
+
+    def check_full(total: StateFrame):
+        stop, aux = check_fn(total)
+        if W > 1:
+            # all workers compute the same verdict on replicated data; the
+            # psum(min) keeps the verdict well-defined even if reductions are
+            # reordered differently per worker (cheap 1-element collective).
+            stop = colls.reduce_scalar(stop.astype(jnp.int32)) >= W
+        return stop, aux
+
+    def check_sharded(total_shard: StateFrame):
+        stop_local, aux = check_fn(total_shard)
+        stop = colls.reduce_scalar(stop_local.astype(jnp.int32)) >= W
+        return stop, aux
+
+    # ----- LOCK / BARRIER: reduce + check on the critical path -----------
+    if strat in (FrameStrategy.LOCK, FrameStrategy.BARRIER):
+        rounds = 1 if strat == FrameStrategy.LOCK else cfg.rounds_per_epoch
+
+        def body(st: EpochState) -> EpochState:
+            k_epoch, key = _split(st.key)
+            delta, carry = _sample_epoch(sample_fn, template, rounds, k_epoch, st.carry)
+            reduced = colls.reduce_frames(delta)          # blocking barrier
+            total = combine(st.total, reduced)
+            stop, aux = check_full(total)
+            e = st.epoch + 1
+            return EpochState(key, carry, total, delta, stop, aux, e,
+                              jnp.where(stop & ~st.stop, e, st.stop_epoch))
+
+    # ----- LOCAL_FRAME: lagged all-reduce, overlappable ------------------
+    elif strat == FrameStrategy.LOCAL_FRAME:
+
+        def body(st: EpochState) -> EpochState:
+            # (a) fold in the PREVIOUS epoch's deltas — no data dependency on
+            # (b), so the all-reduce can overlap the sampling compute.
+            reduced = colls.reduce_frames(st.pending)
+            total = combine(st.total, reduced)
+            stop, aux = check_full(total)
+            # (b) sample the current epoch.
+            k_epoch, key = _split(st.key)
+            delta, carry = _sample_epoch(sample_fn, template,
+                                         cfg.rounds_per_epoch, k_epoch, st.carry)
+            e = st.epoch + 1
+            return EpochState(key, carry, total, delta, stop, aux, e,
+                              jnp.where(stop & ~st.stop, e, st.stop_epoch))
+
+    # ----- SHARED_FRAME: lagged reduce-scatter + 1-bit verdict -----------
+    elif strat == FrameStrategy.SHARED_FRAME:
+        assert colls.scatter_frames is not None, "SHARED_FRAME needs scatter_frames"
+
+        def body(st: EpochState) -> EpochState:
+            reduced_shard = colls.scatter_frames(st.pending)
+            total = combine(st.total, reduced_shard)
+            stop, aux = check_sharded(total)
+            k_epoch, key = _split(st.key)
+            delta, carry = _sample_epoch(sample_fn, template,
+                                         cfg.rounds_per_epoch, k_epoch, st.carry)
+            e = st.epoch + 1
+            return EpochState(key, carry, total, delta, stop, aux, e,
+                              jnp.where(stop & ~st.stop, e, st.stop_epoch))
+
+    # ----- INDEXED_FRAME: deterministic prefix checking ------------------
+    elif strat == FrameStrategy.INDEXED_FRAME:
+        assert seed_scalar is not None and worker_id is not None, \
+            "INDEXED_FRAME needs seed_scalar and worker_id"
+        assert colls.all_frames is not None
+
+        def sample_indexed(epoch: jax.Array, carry: PyTree):
+            m = epoch * W + worker_id          # global frame index
+            k = jax.random.fold_in(jax.random.key(0), seed_scalar)
+            k = jax.random.fold_in(k, m)
+            return _sample_epoch(sample_fn, template, cfg.rounds_per_epoch, k, carry)
+
+        def body(st: EpochState) -> EpochState:
+            gathered = colls.all_frames(st.pending)   # (W, ...) per-frame deltas
+
+            def prefix_step(acc, j):
+                total, stop, aux, stop_epoch = acc
+                fj = jax.tree.map(lambda x: x[j], gathered)
+                total_j = combine(total, fj)
+                s_j, aux_j = check_fn(total_j)
+                # freeze at the FIRST stopping prefix (determinism).
+                first = s_j & ~stop
+                total = jax.tree.map(lambda new, old: jnp.where(stop, old, new),
+                                     total_j, total)
+                aux = jax.tree.map(lambda new, old: jnp.where(first, new, old),
+                                   aux_j, aux)
+                stop_epoch = jnp.where(first, st.epoch + 1, stop_epoch)
+                return (total, stop | s_j, aux, stop_epoch), None
+
+            (total, stop, aux, stop_epoch), _ = jax.lax.scan(
+                prefix_step, (st.total, st.stop, st.aux, st.stop_epoch),
+                jnp.arange(W))
+            if W > 1:  # verdicts agree (same data), keep them in lockstep
+                stop = colls.reduce_scalar(stop.astype(jnp.int32)) >= W
+            delta, carry = sample_indexed(st.epoch, st.carry)
+            return EpochState(st.key, carry, total, delta, stop, aux,
+                              st.epoch + 1, stop_epoch)
+
+    else:  # pragma: no cover
+        raise ValueError(f"unknown strategy {strat}")
+
+    def cond(st: EpochState):
+        return jnp.logical_and(~st.stop, st.epoch < cfg.max_epochs)
+
+    # Epoch 0 produces the first pending frame (there is no SF for epoch 0 —
+    # Alg. 2 note on line 9).
+    if strat == FrameStrategy.INDEXED_FRAME:
+        def sample_first(st):
+            m = jnp.zeros((), jnp.int32) * W + worker_id
+            k = jax.random.fold_in(jax.random.key(0), seed_scalar)
+            k = jax.random.fold_in(k, m)
+            delta, carry = _sample_epoch(sample_fn, template, cfg.rounds_per_epoch,
+                                         k, st.carry)
+            return st._replace(pending=delta, carry=carry,
+                               epoch=jnp.ones((), jnp.int32))
+        state0 = sample_first(state0)
+        # NB: body samples frame for st.epoch (already advanced), so indexed
+        # frame indices stay contiguous: 0·W+wid, 1·W+wid, ...
+    elif strat in (FrameStrategy.LOCAL_FRAME, FrameStrategy.SHARED_FRAME):
+        k0, key = _split(state0.key)
+        delta0, carry0 = _sample_epoch(sample_fn, template, cfg.rounds_per_epoch,
+                                       k0, state0.carry)
+        state0 = state0._replace(key=key, carry=carry0, pending=delta0,
+                                 epoch=jnp.ones((), jnp.int32))
+
+    final = jax.lax.while_loop(cond, body, state0)
+    return final
+
+
+def _split(key):
+    k1, k2 = jax.random.split(key)
+    return k1, k2
+
+
+def _shard_zeros(frame: StateFrame, world: int) -> StateFrame:
+    """Zero frame shaped like this worker's 1/W reduce-scatter shard."""
+    def shard(x):
+        if x.ndim == 0:
+            return x
+        assert x.shape[0] % world == 0, (
+            f"SHARED_FRAME needs leading dim divisible by W={world}; pad the "
+            f"frame (got {x.shape}) — see frames.shard_frame_pad")
+        return jnp.zeros((x.shape[0] // world,) + x.shape[1:], x.dtype)
+    return StateFrame(num=frame.num, data=jax.tree.map(shard, frame.data))
+
+
+# ---------------------------------------------------------------------------
+# Virtual-worker wrapper: simulate W workers on one device with vmap.  This is
+# how tests and the paper-figure benchmarks execute the engine on CPU, and it
+# is semantically identical to shard_map over a mesh axis of size W.
+# ---------------------------------------------------------------------------
+
+AXIS = "workers"
+
+
+def run_virtual(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
+                init_carry: PyTree, seed: int, world: int, cfg: EpochConfig,
+                frame_shards: int = 0) -> EpochState:
+    from .frames import axis_collectives
+    colls = axis_collectives(AXIS, world, frame_shards=frame_shards)
+
+    def per_worker(key, wid):
+        return run_worker(sample_fn, check_fn, template, init_carry, key, cfg,
+                          colls=colls,
+                          seed_scalar=jnp.asarray(seed, jnp.uint32),
+                          worker_id=wid)
+
+    keys = jax.random.split(jax.random.key(seed), world)
+    wids = jnp.arange(world, dtype=jnp.int32)
+    return jax.vmap(per_worker, axis_name=AXIS)(keys, wids)
+
+
+def run_sharded(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
+                init_carry: PyTree, seed: int, mesh, axis: str,
+                cfg: EpochConfig) -> EpochState:
+    """Run the engine over a real mesh axis with shard_map (production path).
+
+    Every leaf of ``init_carry``/``template`` is treated as replicated;
+    sampling randomness is decorrelated per worker via key splitting (or frame
+    indices for INDEXED_FRAME).  Outputs are stacked per worker along a new
+    leading axis of size W (scalars become ``(W,)``; replicated quantities
+    like ``total``/``stop`` repeat identically — callers index ``[0]``).
+    """
+    from jax.sharding import PartitionSpec as P
+    from .frames import axis_collectives
+
+    world = mesh.shape[axis]
+    colls = axis_collectives(axis, world)
+
+    def per_worker(keys, wids):
+        st = run_worker(sample_fn, check_fn, template, init_carry,
+                        keys[0], cfg, colls=colls,
+                        seed_scalar=jnp.asarray(seed, jnp.uint32),
+                        worker_id=wids[0])
+        # add a per-worker leading dim so every leaf can carry P(axis)
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], st)
+
+    keys = jax.random.split(jax.random.key(seed), world)
+    wids = jnp.arange(world, dtype=jnp.int32)
+    fn = jax.shard_map(per_worker, mesh=mesh,
+                       in_specs=(P(axis), P(axis)),
+                       out_specs=P(axis),
+                       check_vma=False)
+    return fn(keys, wids)

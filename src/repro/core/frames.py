@@ -1,0 +1,189 @@
+"""State frames (SFs) — the paper's core data structure, as JAX pytrees.
+
+A state frame holds the sampling state of Algorithm 1:
+
+    frame.num   — number of samples accumulated (scalar, int32/int64-as-float ok)
+    frame.data  — the sampled data (any pytree of arrays; ``n`` = its total size)
+
+The accumulation operator ``∘`` of the paper must be associative; here it is
+elementwise ``+`` over the pytree (sufficient for KADABRA's per-vertex counts
+and for gradient/metric accumulation), but :func:`combine` accepts a custom
+monoid for exotic ADS instances.
+
+Frame *strategies* (paper §3.2, §D.2) are represented by
+:class:`FrameStrategy`; the epoch engine in ``core/epoch.py`` interprets them.
+
+Hardware adaptation (see DESIGN.md §2): the paper's per-thread SFs published
+via store-release become per-device *delta frames* combined with a lagged
+collective.  Equivalence: with cumulative per-thread frames the checked state
+is ``⊕_t cum_t(e)``; with delta frames and a running total it is
+``R_e = R_{e-1} ∘ (⊕_t Δ_{t,e})`` — identical by associativity of ``∘``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StateFrame:
+    """One state frame (paper Fig. 1a). ``epoch`` is static metadata on the
+    host side; inside jitted code it is a traced scalar."""
+
+    num: jax.Array  # scalar — number of samples in this frame
+    data: PyTree    # the sampled data ("n" elements in total)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        leaves = jax.tree_util.tree_leaves(self.data)
+        n = sum(int(x.size) for x in leaves if hasattr(x, "size"))
+        return f"StateFrame(num={self.num!r}, n={n})"
+
+
+class FrameStrategy(enum.Enum):
+    """Parallelization strategies from the paper (plus the two baselines)."""
+
+    LOCK = "lock"            # original-KADABRA analog: reduce+check every round
+    BARRIER = "barrier"      # "OpenMP baseline": reduce+check every N samples,
+                             # collective on the critical path
+    LOCAL_FRAME = "local"    # per-device frames, lagged all-reduce (paper §3.2)
+    SHARED_FRAME = "shared"  # sharded frames, reduce-scatter accumulation
+    INDEXED_FRAME = "indexed"  # deterministic (paper §D.2)
+
+
+def zeros_like_frame(template: PyTree) -> StateFrame:
+    """A fresh (empty) frame for the given data template — Alg. 2 line 12."""
+    data = jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.result_type(x)), template)
+    return StateFrame(num=jnp.zeros((), jnp.int32), data=data)
+
+
+def combine(a: StateFrame, b: StateFrame,
+            op: Callable[[jax.Array, jax.Array], jax.Array] = jnp.add) -> StateFrame:
+    """The associative ``∘`` of Algorithm 1 lifted to frames."""
+    return StateFrame(num=a.num + b.num, data=jax.tree.map(op, a.data, b.data))
+
+
+def accumulate(frames: StateFrame, axis: int = 0) -> StateFrame:
+    """Accumulate a stacked batch of frames along ``axis`` (Alg. 2 line 27).
+
+    This is the Θ(T·n) hot spot of CHECKFRAMES; on TPU it is served by the
+    ``frame_accum`` Pallas kernel (kernels/frame_accum) — this pure-jnp form is
+    its oracle and the XLA lowering path.
+    """
+    return StateFrame(
+        num=jnp.sum(frames.num, axis=axis),
+        data=jax.tree.map(lambda x: jnp.sum(x, axis=axis), frames.data),
+    )
+
+
+def scale(frame: StateFrame, s: jax.Array) -> StateFrame:
+    return StateFrame(num=frame.num, data=jax.tree.map(lambda x: x * s, frame.data))
+
+
+# ---------------------------------------------------------------------------
+# Collective interfaces.  The epoch engine is written against this tiny
+# abstraction so the same code runs (a) under vmap with "virtual workers"
+# (tests / CPU benchmarks), (b) under shard_map on a real mesh axis, and
+# (c) sequentially (W=1 oracle).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Collectives:
+    """How frames of all workers are combined at an epoch boundary.
+
+    ``reduce_frames``  — full combine (local-frame): every worker ends up with
+                         ``⊕_t Δ_t``  (paper: thread-0 accumulation loop).
+    ``scatter_frames`` — sharded combine (shared-frame): worker ``i`` ends up
+                         with shard ``i`` of ``⊕_t Δ_t`` (replaces fetch-add).
+    ``all_frames``     — gather the per-worker deltas (indexed-frame prefix
+                         checks).
+    ``reduce_scalar``  — combine a scalar verdict/statistic across workers.
+    """
+
+    reduce_frames: Callable[[StateFrame], StateFrame]
+    reduce_scalar: Callable[[jax.Array], jax.Array]
+    all_frames: Optional[Callable[[StateFrame], StateFrame]] = None
+    scatter_frames: Optional[Callable[[StateFrame], StateFrame]] = None
+    axis_name: Optional[str] = None
+    world: int = 1
+    frame_shards: int = 0   # paper's F (0 → world)
+
+
+def sequential_collectives() -> Collectives:
+    """W=1: everything is the identity."""
+    ident = lambda x: x
+    return Collectives(reduce_frames=ident, reduce_scalar=ident,
+                       all_frames=lambda f: jax.tree.map(lambda x: x[None], f),
+                       scatter_frames=ident, world=1)
+
+
+def axis_collectives(axis_name: str, world: int,
+                     frame_shards: int = 0) -> Collectives:
+    """Collectives over a named mapped axis (vmap(axis_name=...) or shard_map).
+
+    Under ``shard_map`` on a mesh axis these lower to real all-reduce /
+    reduce-scatter / all-gather collectives; under ``vmap`` they simulate the
+    same semantics for W virtual workers on one device.
+
+    ``frame_shards`` (= the paper's **F**, §3.2/Fig. 3b): how many shards the
+    SHARED_FRAME state is split into.  F = world → a plain reduce-scatter
+    (minimum memory).  F < world → workers are grouped into world/F redundant
+    groups: reduce-scatter *within* a group of F, then an all-reduce *across*
+    the groups of the per-shard partials — memory n/F per worker, bandwidth
+    split between the two phases, mirroring the paper's F trade-off.
+    """
+
+    def reduce_frames(f: StateFrame) -> StateFrame:
+        return jax.tree.map(partial(jax.lax.psum, axis_name=axis_name), f)
+
+    def reduce_scalar(x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, axis_name=axis_name)
+
+    def all_frames(f: StateFrame) -> StateFrame:
+        return jax.tree.map(
+            partial(jax.lax.all_gather, axis_name=axis_name, axis=0), f)
+
+    F = frame_shards or world
+    assert world % F == 0 and F <= world, (world, F)
+
+    def scatter_frames(f: StateFrame) -> StateFrame:
+        # reduce-scatter: each worker keeps its 1/F shard of the sum.
+        # psum_scatter requires the leading dim divisible by F; frames used
+        # with SHARED_FRAME must be padded accordingly (see shard_frame_pad).
+        def rs(x):
+            if x.ndim == 0:  # scalars (num) are fully reduced
+                return jax.lax.psum(x, axis_name=axis_name)
+            if F == world:
+                return jax.lax.psum_scatter(x, axis_name=axis_name,
+                                            tiled=True)
+            # F < W (paper's Fig. 3b): worker g·F+i holds shard i of the
+            # GLOBAL sum (groups hold redundant copies).  Reference form:
+            # psum then slice (axis_index_groups is unsupported under vmap;
+            # a shard_map deployment replaces this with grouped
+            # reduce-scatter + cross-group all-reduce of n/F partials).
+            total = jax.lax.psum(x, axis_name=axis_name)
+            wid = jax.lax.axis_index(axis_name)
+            shard_len = x.shape[0] // F
+            start = (wid % F) * shard_len
+            return jax.lax.dynamic_slice_in_dim(total, start, shard_len,
+                                                axis=0)
+        return StateFrame(num=jax.lax.psum(f.num, axis_name=axis_name),
+                          data=jax.tree.map(rs, f.data))
+
+    return Collectives(reduce_frames=reduce_frames, reduce_scalar=reduce_scalar,
+                       all_frames=all_frames, scatter_frames=scatter_frames,
+                       axis_name=axis_name, world=world, frame_shards=F)
+
+
+def shard_frame_pad(n: int, world: int) -> int:
+    """Padded frame length so a length-``n`` data vector reduce-scatters
+    evenly over ``world`` workers (shared-frame)."""
+    return ((n + world - 1) // world) * world

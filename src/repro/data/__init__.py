@@ -1,0 +1,3 @@
+from .pipeline import TokenStream, DataCursor
+
+__all__ = ["TokenStream", "DataCursor"]

@@ -1,0 +1,19 @@
+"""Graph substrate for the KADABRA case study (paper §2.2–2.3).
+
+CSR graphs as JAX arrays, synthetic generators, level-synchronous BFS with
+shortest-path counting, uniform shortest-path sampling, the exact Brandes
+oracle, and the KADABRA preprocessing + adaptive-sampling driver.
+"""
+from .csr import Graph, from_edges
+from .gens import erdos_renyi, barabasi_albert, grid2d
+from .bfs import bfs_sssp, connected_components, eccentricity, sample_path
+from .brandes import brandes_exact
+from .kadabra import (KadabraParams, frame_template, make_sample_fn,
+                      preprocess, run_kadabra)
+
+__all__ = [
+    "Graph", "from_edges", "erdos_renyi", "barabasi_albert", "grid2d",
+    "bfs_sssp", "connected_components", "eccentricity", "sample_path",
+    "brandes_exact", "KadabraParams", "preprocess", "make_sample_fn",
+    "run_kadabra", "frame_template",
+]

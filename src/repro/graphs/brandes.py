@@ -1,0 +1,46 @@
+"""Exact betweenness centrality (Brandes 2001) — pure-numpy test oracle.
+
+Normalized by n(n−1) over ordered pairs, matching KADABRA's estimator
+b(v) = (1/(n(n−1))) Σ_{s≠t} σ_st(v)/σ_st  (paper §2.2/§2.3).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from .csr import Graph
+
+
+def brandes_exact(g: Graph) -> np.ndarray:
+    n = g.n
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices_padded)[: g.m_arcs]
+    bc = np.zeros(n, dtype=np.float64)
+    for s in range(n):
+        dist = np.full(n, -1, dtype=np.int64)
+        sigma = np.zeros(n, dtype=np.float64)
+        dist[s] = 0
+        sigma[s] = 1.0
+        order = []
+        q = deque([s])
+        while q:
+            v = q.popleft()
+            order.append(v)
+            for w in indices[indptr[v]:indptr[v + 1]]:
+                if dist[w] < 0:
+                    dist[w] = dist[v] + 1
+                    q.append(w)
+                if dist[w] == dist[v] + 1:
+                    sigma[w] += sigma[v]
+        delta = np.zeros(n, dtype=np.float64)
+        for w in reversed(order):
+            for u in indices[indptr[w]:indptr[w + 1]]:
+                if dist[u] == dist[w] - 1 and sigma[w] > 0:
+                    delta[u] += sigma[u] / sigma[w] * (1.0 + delta[w])
+            if w != s:
+                bc[w] += delta[w]
+    # Brandes accumulates over ordered (s, t≠s) pairs already (dependency
+    # accumulation counts each target t once per source s).
+    return bc / (n * (n - 1))

@@ -1,0 +1,58 @@
+"""Synthetic graph generators matched to the paper's instance categories
+(App. E): social/hyperlink (Erdős–Rényi / Barabási–Albert: low diameter) and
+infrastructure/road (2-D grids: high diameter).  The paper's 27 KONECT/SNAP
+graphs are not redistributable in this container; see DESIGN.md §8."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import Graph, from_edges
+
+
+def erdos_renyi(n: int, m_edges: int, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    # sample with replacement then dedup inside from_edges; oversample a bit
+    e = rng.integers(0, n, size=(int(m_edges * 1.15) + 8, 2))
+    g = from_edges(n, e)
+    return _ensure_connected_core(g, n, e, seed)
+
+
+def barabasi_albert(n: int, m_per: int = 3, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    targets = list(range(m_per + 1))
+    repeated: list[int] = list(targets)
+    edges = []
+    for v in range(m_per + 1, n):
+        chosen = rng.choice(repeated, size=m_per, replace=False) \
+            if len(set(repeated)) >= m_per else rng.integers(0, v, size=m_per)
+        for t in np.atleast_1d(chosen):
+            edges.append((v, int(t)))
+            repeated.append(int(t))
+        repeated.extend([v] * m_per)
+    return from_edges(n, np.array(edges))
+
+
+def grid2d(rows: int, cols: int) -> Graph:
+    """Road-network analog: high diameter, degree ≤ 4."""
+    n = rows * cols
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                edges.append((v, v + 1))
+            if r + 1 < rows:
+                edges.append((v, v + cols))
+    return from_edges(n, np.array(edges))
+
+
+def _ensure_connected_core(g: Graph, n: int, e: np.ndarray, seed: int) -> Graph:
+    """Attach isolated vertices to vertex 0 so ER graphs have one big CC
+    (keeps test oracles simple; KADABRA itself handles multiple CCs)."""
+    deg = np.asarray(g.indptr[1:]) - np.asarray(g.indptr[:-1])
+    isolated = np.where(deg == 0)[0]
+    if isolated.size == 0:
+        return g
+    extra = np.stack([isolated, np.zeros_like(isolated)], axis=1)
+    return from_edges(n, np.concatenate([np.asarray(e), extra], axis=0))

@@ -1,0 +1,74 @@
+"""Pallas kernel: one BFS level of KADABRA's SAMPLE() — CSR frontier
+expansion with shortest-path counting.
+
+For every arc (u→v):  agg[v] += σ[u] · [dist[u] == level].
+
+Tiling: grid over edge blocks (the σ/dist vectors and the agg accumulator
+stay VMEM-resident across the serial grid — sound on TPU where grid steps of
+one core execute in order).  The gather σ[src] / scatter-add agg[dst] are
+VPU-served from VMEM; edge blocks stream in via contiguous DMA.  This bounds
+the kernel to graphs whose per-vertex state fits VMEM (~2M vertices at f32);
+larger graphs run the vertex-blocked XLA path (``graphs/bfs.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(src_ref, dst_ref, sigma_ref, dist_ref, level_ref, agg_ref, *,
+            n_blocks: int):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        agg_ref[...] = jnp.zeros_like(agg_ref)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    level = level_ref[0]
+    contrib = jnp.where(dist_ref[src] == level, sigma_ref[src], 0.0)
+    # serial-grid scatter-add into the VMEM-resident accumulator
+    agg_ref[...] = agg_ref[...] + jnp.zeros_like(agg_ref).at[dst].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def bfs_frontier(src: jax.Array, dst: jax.Array, sigma: jax.Array,
+                 dist: jax.Array, level: jax.Array, *, block_e: int = 4096,
+                 interpret: bool = False) -> jax.Array:
+    """One frontier-expansion level.
+
+    src/dst: (m,) int32 arcs; sigma: (n,) f32; dist: (n,) int32;
+    level: scalar int32 → agg (n,) f32 (Σ of frontier σ into each vertex).
+    Arcs padded with src=dst=n−1? No: pad arcs must point at a dead slot —
+    callers pad with an extra sentinel vertex (sigma row n is appended here).
+    """
+    m = src.shape[0]
+    n = sigma.shape[0]
+    block_e = min(block_e, m)
+    pad = (-m) % block_e
+    if pad:  # sentinel self-loops on an appended dead vertex
+        src = jnp.pad(src, (0, pad), constant_values=n)
+        dst = jnp.pad(dst, (0, pad), constant_values=n)
+    sigma_x = jnp.pad(sigma.astype(jnp.float32), (0, 1))
+    dist_x = jnp.pad(dist, (0, 1), constant_values=jnp.iinfo(jnp.int32).max)
+    mp = m + pad
+    agg = pl.pallas_call(
+        functools.partial(_kernel, n_blocks=mp // block_e),
+        grid=(mp // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda e: (e,)),
+            pl.BlockSpec((block_e,), lambda e: (e,)),
+            pl.BlockSpec((n + 1,), lambda e: (0,)),
+            pl.BlockSpec((n + 1,), lambda e: (0,)),
+            pl.BlockSpec((1,), lambda e: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n + 1,), lambda e: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n + 1,), jnp.float32),
+        interpret=interpret,
+    )(src, dst, sigma_x, dist_x, level[None])
+    return agg[:n]

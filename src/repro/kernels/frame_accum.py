@@ -1,0 +1,45 @@
+"""Pallas kernel: state-frame accumulation (Alg. 2 line 27).
+
+Accumulates W worker frames of n elements each — the Θ(T·n) hot spot of
+CHECKFRAMES.  Tiling: the n axis is split into VMEM-resident blocks; each
+grid step loads a (W, BLOCK_N) tile and tree-sums over W on the VPU.  The
+frames are read linearly (the paper's favorable-access-pattern argument,
+§3.3, survives on TPU: each tile is one contiguous DMA per worker row).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(frames_ref, out_ref):
+    # frames_ref: (W, BLOCK_N) in VMEM; out_ref: (BLOCK_N,)
+    acc_t = (jnp.float32 if jnp.issubdtype(frames_ref.dtype, jnp.floating)
+             else jnp.int32)
+    out_ref[...] = jnp.sum(frames_ref[...].astype(acc_t), axis=0
+                           ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def frame_accum(frames: jax.Array, *, block_n: int = 2048,
+                interpret: bool = False) -> jax.Array:
+    """frames: (W, n) → (n,) sum over workers."""
+    W, n = frames.shape
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        frames = jnp.pad(frames, ((0, 0), (0, pad)))
+    npad = n + pad
+    out = pl.pallas_call(
+        _kernel,
+        grid=(npad // block_n,),
+        in_specs=[pl.BlockSpec((W, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), frames.dtype),
+        interpret=interpret,
+    )(frames)
+    return out[:n]

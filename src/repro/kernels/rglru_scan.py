@@ -1,0 +1,40 @@
+"""Pallas kernel: RG-LRU gated linear recurrence  h_t = a_t⊙h_{t−1} + b_t
+over (B, S, W) — the N=1 sibling of ``ssm_scan`` with wider channel tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, h_ref, *, seq_len: int):
+    def step(t, h):
+        h = a_ref[0, t] * h + b_ref[0, t]
+        h_ref[0, t] = h
+        return h
+
+    jax.lax.fori_loop(0, seq_len, step, jnp.zeros_like(a_ref[0, 0]))
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, *, block_w: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, W) f32 → all h_t (B, S, W)."""
+    B, S, W = a.shape
+    block_w = min(block_w, W)
+    assert W % block_w == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, seq_len=S),
+        grid=(B, W // block_w),
+        in_specs=[
+            pl.BlockSpec((1, S, block_w), lambda b_, w: (b_, 0, w)),
+            pl.BlockSpec((1, S, block_w), lambda b_, w: (b_, 0, w)),
+        ],
+        out_specs=pl.BlockSpec((1, S, block_w), lambda b_, w: (b_, 0, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

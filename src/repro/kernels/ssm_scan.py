@@ -1,0 +1,49 @@
+"""Pallas kernel: Mamba selective-scan recurrence  h_t = a_t⊙h_{t−1} + b_t.
+
+Tiling: grid = (B, d_inner / BLOCK_D); each grid step keeps a
+(S, BLOCK_D, N) slab of a/b in VMEM and walks the sequence with an in-kernel
+``fori_loop`` (the recurrence is sequential in S but embarrassingly parallel
+in (B, d_inner, N) — the VPU processes BLOCK_D·N lanes per step).  The
+production variant for very long S processes S in chunks carrying h between
+chunk launches (the chunk boundary state is exactly the decode state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, h_ref, *, seq_len: int):
+    # refs: (1, S, BLOCK_D, N); out h_ref same
+    def step(t, h):
+        h = a_ref[0, t] * h + b_ref[0, t]
+        h_ref[0, t] = h
+        return h
+
+    h0 = jnp.zeros_like(a_ref[0, 0])
+    jax.lax.fori_loop(0, seq_len, step, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan(a: jax.Array, b: jax.Array, *, block_d: int = 256,
+             interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, D, N) f32 → all h_t (B, S, D, N)."""
+    B, S, D, N = a.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, seq_len=S),
+        grid=(B, D // block_d),
+        in_specs=[
+            pl.BlockSpec((1, S, block_d, N), lambda b_, d: (b_, 0, d, 0)),
+            pl.BlockSpec((1, S, block_d, N), lambda b_, d: (b_, 0, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, block_d, N),
+                               lambda b_, d: (b_, 0, d, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D, N), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

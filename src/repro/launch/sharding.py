@@ -1,0 +1,101 @@
+"""Sharding policy: logical axes → mesh axes, per architecture.
+
+The policy is a small, inspectable table (hillclimbing edits happen here).
+Divisibility fallback lives in :class:`repro.models.layers.ShardingRules`,
+so one table serves all ten architectures.
+
+Parallelism provided (DESIGN.md §3.2):
+* DP   — batch over ``pod``×``data``
+* TP   — heads / kv / ffn / experts / vocab / d_inner / lru over ``model``
+* SP   — residual-stream sequence over ``model`` between layers (opt-in)
+* EP   — experts over ``model`` when the count divides (else TP-MoE)
+* FSDP — weight ``embed`` dim additionally over ``data`` (ZeRO-3-style),
+         opt-in per arch size; optimizer state is sharded likewise (ZeRO-1
+         comes for free since opt state mirrors param specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyFlags:
+    fsdp: bool = False             # shard weights' "embed" dim over data axes
+    seq_parallel: bool = False     # shard residual seq over model axis
+    zero1: bool = True             # optimizer state sharded like FSDP even
+                                   # when weights are not (applied in optim)
+    dp_over_model: bool = False    # small archs: replicate weights, use the
+                                   # model axis as extra DP (batch spreads
+                                   # over pod×data×model) — avoids the 16×
+                                   # replicated-attention waste when heads
+                                   # don't divide the model axis (§Perf)
+
+
+def default_flags(cfg: ModelConfig) -> PolicyFlags:
+    # Baseline policy (paper-faithful Megatron TP + DP + FSDP-when-big).
+    # dp_over_model stays False here — it is a §Perf hillclimb flag applied
+    # explicitly via ``dryrun --opt`` so the before/after is measurable.
+    big = cfg.param_count() * 2 > 12e9   # >12 GB of bf16 weights
+    return PolicyFlags(fsdp=big, seq_parallel=big)
+
+
+def build_rules(cfg: ModelConfig, mesh: Mesh,
+                flags: Optional[PolicyFlags] = None) -> ShardingRules:
+    flags = flags or default_flags(cfg)
+    dp: Tuple[str, ...] = tuple(a for a in mesh.axis_names if a != "model")
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    if flags.dp_over_model:
+        dp = tuple(mesh.axis_names)   # model axis becomes extra DP
+        tp = ()                       # weights fully replicated
+
+    rules: Dict[str, Tuple[str, ...]] = {
+        # ---- weights
+        "vocab": tp,
+        "heads": tp,
+        "kv": tp,
+        "ffn": tp,
+        "experts": tp,     # EP when divisible; fallback replicates → TP path
+        "inner": tp,       # mamba d_inner
+        "inner2": tp,      # mamba in_proj fused 2·d_inner
+        "lru": tp,
+        "lru_in": (),      # second dim of square lru gate weights
+        "embed": dp if flags.fsdp else (),
+        "layers": (),
+        # ---- activations
+        "batch": dp,
+        "heads_act": tp,
+        "ffn_act": tp,
+        "experts_act": tp,   # EP dispatch target (divisibility-checked)
+        "seq_sp": tp if flags.seq_parallel else (),
+        # decode KV caches are always sequence-sharded over the model axis
+        # (flash-decoding; GQA kv-head counts don't divide 16 — DESIGN §3.2)
+        "seq_kv": tp,
+    }
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardingRules(rules=rules, mesh_shape=mesh_shape)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str,
+                rules: Optional[ShardingRules] = None):
+    """PartitionSpecs for the input batch pytree (see launch/specs.py)."""
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dps = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if kind == "decode":
+        tok = P(dps)
+        return {"tokens": tok, "pos": tok}
+    specs = {"tokens": P(dps, None), "labels": P(dps, None)}
+    if cfg.family == "vlm":
+        specs["patches"] = P(dps, None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = P(dps, None, None)
+    if kind == "prefill":
+        specs.pop("labels")
+    return specs

@@ -1,0 +1,175 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input.
+
+``input_specs(arch, shape, mesh)`` returns (kwargs of ShapeDtypeStructs,
+matching in_shardings) for the step function that the given shape lowers:
+``train_step(params, opt_state, batch)``, ``prefill_step(params, batch)``
+or ``serve_step(params, cache, batch)``.  No device memory is allocated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, ModelConfig, ShapeConfig
+from repro.models.layers import ParamDef, ShardingRules, param_specs
+from repro.launch.sharding import PolicyFlags, build_rules, default_flags
+
+PyTree = Any
+
+# logical axes of each batch entry
+_BATCH_LOGICAL = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "patches": ("batch", None, None),
+    "frames": ("batch", None, None),
+}
+_DECODE_LOGICAL = {"tokens": ("batch",), "pos": ("batch",)}
+
+# logical axes of cache entries, keyed by (family-kind, key)
+_CACHE_LOGICAL = {
+    "k": (None, "batch", "seq_kv", None, None),
+    "v": (None, "batch", "seq_kv", None, None),
+    "cross_k": (None, "batch", "seq_kv", None, None),
+    "cross_v": (None, "batch", "seq_kv", None, None),
+    "kpos": ("batch", "seq_kv"),
+    "h_ssm": (None, "batch", "inner", None),
+    "conv_ssm": (None, "batch", None, "inner"),
+    "h_hyb": (None, None, "batch", "lru"),
+    "conv_hyb": (None, None, "batch", None, "lru"),
+    "tail_h": (None, "batch", "lru"),
+    "tail_conv": (None, "batch", None, "lru"),
+}
+
+
+def _cache_logical(cfg: ModelConfig, key: str) -> Tuple:
+    if key in ("h", "conv"):
+        suffix = "_ssm" if cfg.family == "ssm" else "_hyb"
+        return _CACHE_LOGICAL[key + suffix]
+    return _CACHE_LOGICAL[key]
+
+
+def microbatched(shape: ShapeConfig, accum: int) -> Tuple[int, int]:
+    """(n_micro, per-micro batch) for train shapes."""
+    a = max(1, accum)
+    while shape.global_batch % a != 0:
+        a -= 1
+    return a, shape.global_batch // a
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 micro: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one batch of the given shape.
+
+    For train shapes with grad_accum > 1 the leading dim is
+    (n_micro, micro_batch, …) — the step scans microbatches.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((B,), jnp.int32), "pos": sds((B,), jnp.int32)}
+
+    lead: Tuple[int, ...]
+    if shape.kind == "train" and (micro or cfg.grad_accum) > 1:
+        n_micro, mb = microbatched(shape, micro or cfg.grad_accum)
+        lead = (n_micro, mb)
+    else:
+        lead = (B,)
+
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    text_len = S
+    if cfg.family == "vlm":
+        text_len = S - cfg.n_patches
+        out["patches"] = sds(lead + (cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = sds(lead + (S // cfg.frame_ratio, cfg.d_model),
+                            jnp.bfloat16)
+    out["tokens"] = sds(lead + (text_len,), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = sds(lead + (text_len,), jnp.int32)
+    return out
+
+
+def _spec_with_micro(rules: ShardingRules, shape_t: Tuple[int, ...],
+                     logical: Tuple, micro: bool) -> P:
+    if micro:  # leading (n_micro, mb, …): n_micro replicated, mb = batch
+        logical = (None,) + logical
+    return rules.spec_for_shape(shape_t, logical)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules: ShardingRules,
+                    structs: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, Any]:
+    logical_map = _DECODE_LOGICAL if shape.kind == "decode" else _BATCH_LOGICAL
+    micro = shape.kind == "train" and cfg.grad_accum > 1
+    return {
+        k: NamedSharding(mesh, _spec_with_micro(rules, v.shape,
+                                                logical_map[k], micro))
+        for k, v in structs.items()
+    }
+
+
+def opt_rules(rules: ShardingRules, mesh: Mesh,
+              flags: PolicyFlags) -> ShardingRules:
+    """ZeRO-1: optimizer state shards its 'embed' dim over the data axes even
+    when the weights do not (flags.zero1)."""
+    if not flags.zero1:
+        return rules
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    r = dict(rules.rules)
+    if not r.get("embed"):
+        r["embed"] = dp
+    return ShardingRules(rules=r, mesh_shape=rules.mesh_shape)
+
+
+def input_specs(arch: str | ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                flags: Optional[PolicyFlags] = None):
+    """→ (kwargs: dict of SDS pytrees, in_shardings: matching dict,
+         rules, model).  kwargs match the step function signature for
+         ``shape.kind``."""
+    from repro.models import get_config
+    cfg = arch if isinstance(arch, ModelConfig) else get_config(arch)
+    flags = flags or default_flags(cfg)
+    rules = build_rules(cfg, mesh, flags)
+    model = Model(cfg, rules)
+    defs = model.param_defs()
+    params = model.abstract()
+    pspecs = jax.tree.map(lambda d: NamedSharding(mesh, rules.spec_for(d)),
+                          defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+    bstruct = batch_struct(cfg, shape)
+    bshard = batch_shardings(cfg, shape, mesh, rules, bstruct)
+
+    if shape.kind == "train":
+        orules = opt_rules(rules, mesh, flags)
+        ospecs_leaf = jax.tree.map(
+            lambda d: NamedSharding(mesh, orules.spec_for(d)), defs,
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        f32 = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+        from repro.optim.adamw import AdamWState
+        opt_state = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                               mu=f32(params), nu=f32(params))
+        opt_shard = AdamWState(
+            step=NamedSharding(mesh, P()), mu=ospecs_leaf, nu=ospecs_leaf)
+        kwargs = {"params": params, "opt_state": opt_state, "batch": bstruct}
+        shardings = {"params": pspecs, "opt_state": opt_shard,
+                     "batch": bshard}
+    elif shape.kind == "prefill":
+        kwargs = {"params": params, "batch": bstruct}
+        shardings = {"params": pspecs, "batch": bshard}
+    else:  # decode
+        cache = jax.eval_shape(
+            lambda: Model(cfg, None).init_cache(shape.global_batch,
+                                                shape.seq_len))
+        cshard = {
+            k: NamedSharding(
+                mesh, rules.spec_for_shape(v.shape, _cache_logical(cfg, k)))
+            for k, v in cache.items()
+        }
+        kwargs = {"params": params, "cache": cache, "batch": bstruct}
+        shardings = {"params": pspecs, "cache": cshard, "batch": bshard}
+    return kwargs, shardings, rules, model

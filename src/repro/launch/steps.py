@@ -1,0 +1,85 @@
+"""Step functions: train (grad-accum scan + AdamW), prefill, decode.
+
+These are the functions the dry-run lowers and the launchers jit.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update
+
+PyTree = Any
+
+
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None
+                    ) -> Callable:
+    """train_step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    ``batch`` leaves are (B, …) or (n_micro, mb, …); microbatches are scanned
+    with f32 gradient accumulation (the associative ∘ of the paper's
+    framework — ``optim.adaptive_accumulate`` is the adaptive variant used by
+    the training loop; the fixed scan is what the dry-run lowers).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        tokens = batch["tokens"]
+        if tokens.ndim == 3:  # (n_micro, mb, S): scan with accumulation
+            n_micro = tokens.shape[0]
+
+            def micro(acc, mb):
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum, lsum = acc
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.float32(0)), batch)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, gnorm = adamw_update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        _, logits = model.prefill(params, batch)
+        return logits  # (B, V) last-position logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, greedy: bool = True) -> Callable:
+    """serve_step(params, cache, batch) → (cache', next_tokens)."""
+
+    def serve_step(params, cache, batch):
+        cache, logits = model.decode_step(params, cache, batch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, nxt
+
+    return serve_step
+
+
+def step_for(model: Model, kind: str) -> Callable:
+    if kind == "train":
+        return make_train_step(model)
+    if kind == "prefill":
+        return make_prefill_step(model)
+    return make_serve_step(model)

@@ -1,0 +1,6 @@
+from .config import (ModelConfig, ShapeConfig, SHAPES, get_config,
+                     all_configs, register, cell_is_applicable)
+from .transformer import Model
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config",
+           "all_configs", "register", "cell_is_applicable", "Model"]

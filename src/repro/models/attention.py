@@ -1,0 +1,179 @@
+"""GQA attention: train/prefill (full or sliding-window, causal) + decode.
+
+Three execution paths:
+
+* ``attn_full``   — single-einsum masked attention (small S; smoke tests).
+* ``attn_chunked``— flash-style streaming softmax over KV chunks per Q chunk,
+                    O(S·chunk) live memory — the XLA path used by the dry-run
+                    for long sequences.  (The Pallas TPU kernel
+                    ``kernels/flash_attention`` implements the same math with
+                    VMEM tiling and *causal block skipping*; this function is
+                    its oracle.  The XLA path computes masked full rectangles:
+                    ~2× causal FLOPs — called out in the roofline analysis.)
+* ``attn_decode`` — one-token attention against a (possibly ring-buffered,
+                    sequence-sharded) KV cache.  With the cache's S dimension
+                    sharded over the ``model`` mesh axis, GSPMD lowers the
+                    max/sum reductions to the flash-decoding collective
+                    pattern (partial softmax + combine).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,KV,G,hd), k: (B,Sk,KV,hd) → (B,KV,G,Sq,Sk) (f32)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    return s / jnp.sqrt(jnp.float32(hd))
+
+
+def _causal_mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """(…Sq,Sk) bool: k attends-able from q (causal ∧ window ∧ k valid)."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def attn_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              window: int = 0, q_offset: int = 0) -> jax.Array:
+    """(B,S,H,hd)×(B,S,KV,hd) GQA causal attention, materialized scores."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = _gqa_scores(qg, k)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    mask = _causal_mask(q_pos, k_pos, window)
+    scores = jnp.where(mask, scores, NEG)
+    att = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", att, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attn_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 window: int = 0, chunk: int = 1024,
+                 remat_inner: bool = True, unroll: bool = False) -> jax.Array:
+    """Flash-style causal GQA with streaming softmax (oracle of the Pallas
+    kernel).  Memory: O(B·H·chunk²) per block pair instead of O(B·H·S²).
+
+    ``unroll=False`` (runtime path): lax.scan sweeps *all* KV chunks per Q
+    chunk with masking (≈2× causal FLOPs; ``remat_inner`` recomputes the
+    block softmax in backward so residuals stay O(S·hd) not O(S²)).
+
+    ``unroll=True`` (roofline layer-differencing path): python loops with
+    *static* causal/window block skipping — the FLOP/byte profile of the
+    Pallas TPU kernel, visible to ``cost_analysis``.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if S % chunk != 0 or S <= chunk:
+        return attn_full(q, k, v, window=window)
+    nq = S // chunk
+    import math
+    scale = 1.0 / math.sqrt(hd)
+
+    def block(q_blk, k_blk, v_blk, qi, kj, carry):
+        m, l, acc = carry
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = qi * chunk + jnp.arange(chunk)
+        k_pos = kj * chunk + jnp.arange(chunk)
+        mask = _causal_mask(q_pos, k_pos, window)              # (chunk, chunk)
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(q.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    if remat_inner and not unroll:
+        block = jax.checkpoint(block)
+
+    def init_carry():
+        return (jnp.full((B, KV, G, chunk), NEG, jnp.float32),
+                jnp.zeros((B, KV, G, chunk), jnp.float32),
+                jnp.zeros((B, KV, G, chunk, hd), jnp.float32))
+
+    if unroll:
+        qs = q.reshape(B, nq, chunk, KV, G, hd)
+        ks = k.reshape(B, nq, chunk, KV, hd)
+        vs = v.reshape(B, nq, chunk, KV, hd)
+        outs = []
+        for qi in range(nq):
+            carry = init_carry()
+            for kj in range(nq):
+                if kj > qi:               # static causal skip
+                    continue
+                if window > 0 and (kj + 1) * chunk <= qi * chunk - window:
+                    continue              # static window skip
+                carry = block(qs[:, qi], ks[:, kj], vs[:, kj], qi, kj, carry)
+            m, l, acc = carry
+            outs.append((acc / jnp.maximum(l, 1e-30)[..., None]
+                         ).astype(q.dtype))
+        out = jnp.stack(outs, axis=1)      # (B, nq, KV, G, chunk, hd)
+        return out.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, H, hd)
+
+    # (nq, B, chunk, …) so scan iterates over blocks
+    qc = q.reshape(B, nq, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nq, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nq, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, inputs):
+        qi, q_blk = inputs                      # q_blk: (B, chunk, KV, G, hd)
+
+        def kv_step(carry, kv_inputs):
+            kj, k_blk, v_blk = kv_inputs        # k_blk: (B, chunk, KV, hd)
+            return block(q_blk, k_blk, v_blk, qi, kj, carry), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, init_carry(),
+                                      (jnp.arange(nq), kc, vc))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out                        # (B, KV, G, chunk, hd)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qc))
+    # (nq, B, KV, G, chunk, hd) → (B, S, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return out
+
+
+def attn_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                k_pos: jax.Array, pos: jax.Array, *,
+                window: int = 0) -> jax.Array:
+    """One-token GQA attention against a cache.
+
+    q: (B, H, hd); k_cache/v_cache: (B, Sc, KV, hd); ``k_pos``: (B, Sc)
+    absolute positions stored in each cache slot (−1 ⇒ empty); ``pos``: (B,)
+    current absolute position.  Ring-buffered SWA caches pass their slot→
+    position map in ``k_pos`` so masking is layout-independent.
+    """
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+                       jnp.float32(hd))
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+    if window > 0:
+        valid &= k_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskh->bkgh", (p / jnp.maximum(l, 1e-30)
+                                         ).astype(q.dtype), v_cache)
+    return out.reshape(B, H, hd)

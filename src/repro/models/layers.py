@@ -1,0 +1,188 @@
+"""Parameter definitions, initialization, and logical-axis sharding.
+
+Every parameter is declared as a :class:`ParamDef` carrying *logical* axis
+names (``"embed"``, ``"vocab"``, ``"heads"``, ``"ffn"``, ``"experts"``, …).
+A :class:`ShardingRules` table maps logical axes to mesh axes with automatic
+**divisibility fallback** (an axis that does not divide evenly is replicated
+— e.g. smollm's 15 heads on a 16-way model axis), so a single policy serves
+all ten architectures.  See DESIGN.md §3.2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]     # one logical name (or None) per dim
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"                   # normal | zeros | ones | scaled
+    scale: float = 1.0
+    fan_in: int = 0                        # explicit contraction size for
+                                           # "scaled" init (0 → shape[-2];
+                                           # REQUIRED for 3-D projections
+                                           # where shape[-2] is not the
+                                           # contracted extent)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_leaf(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "scaled":  # truncated-normal fan-in scaling
+        fan_in = d.fan_in or (d.shape[-2] if len(d.shape) >= 2
+                              else d.shape[-1])
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.truncated_normal(key, -2.0, 2.0, d.shape, jnp.float32)
+                * std).astype(d.dtype)
+    return (jax.random.normal(key, d.shape, jnp.float32) * d.scale * 0.02
+            ).astype(d.dtype)
+
+
+def init_params(defs: PyTree, key: jax.Array) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(defs: PyTree) -> PyTree:
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis → tuple of mesh axes (applied with divisibility check)."""
+    rules: Dict[str, Tuple[str, ...]]
+    mesh_shape: Dict[str, int]
+
+    def spec_for(self, d: ParamDef) -> P:
+        return self.spec_for_shape(d.shape, d.logical)
+
+    def spec_for_shape(self, shape: Sequence[int],
+                       logical: Sequence[Optional[str]]) -> P:
+        used: set = set()
+        out = []
+        for size, name in zip(shape, logical):
+            axes = self.rules.get(name, ()) if name else ()
+            chosen = []
+            prod = 1
+            for ax in axes:
+                if ax in used:
+                    continue
+                a = self.mesh_shape.get(ax, 1)
+                if a > 1 and size % (prod * a) == 0:
+                    chosen.append(ax)
+                    prod *= a
+            for ax in chosen:
+                used.add(ax)
+            out.append(tuple(chosen) if len(chosen) > 1
+                       else (chosen[0] if chosen else None))
+        return P(*out)
+
+    def constrain(self, x: jax.Array,
+                  logical: Sequence[Optional[str]]) -> jax.Array:
+        """with_sharding_constraint by logical names (no-op off-mesh).
+
+        If divisibility fallback empties the spec entirely, *skip* the
+        constraint rather than pinning the tensor replicated — an all-None
+        spec is a hard replication constraint under GSPMD and can force
+        giant activation all-gathers (see EXPERIMENTS.md §Perf, mixtral)."""
+        try:
+            spec = self.spec_for_shape(x.shape, logical)
+            if all(s is None for s in spec):
+                return x
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            return x
+
+
+def param_specs(defs: PyTree, rules: ShardingRules) -> PyTree:
+    return jax.tree.map(lambda d: rules.spec_for(d), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def shardings_for(defs: PyTree, rules: ShardingRules, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda d: NamedSharding(mesh, rules.spec_for(d)), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def rotary(q: jax.Array, k: jax.Array, positions: jax.Array,
+           theta: float = 10_000.0) -> Tuple[jax.Array, jax.Array]:
+    """RoPE applied to (..., S, H, hd) q/k given (..., S) positions."""
+    hd = q.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                     # (..., S, 1, half)
+    sin = sin[..., None, :]
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        return jnp.concatenate(
+            [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+           constrain: Callable[[jax.Array], jax.Array] = lambda x: x
+           ) -> jax.Array:
+    h = constrain(jax.nn.silu(x @ w1) * (x @ w3))
+    return h @ w2
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          vocab: int) -> jax.Array:
+    """Token-mean CE on (…, V_padded) logits; labels ≥ vocab are masked.
+
+    Works with vocab-sharded logits: the max/sum reductions lower to
+    all-reduces under GSPMD.
+    """
+    lf = logits.astype(jnp.float32)
+    # mask padded vocab tail — elementwise (iota < vocab), NOT .at[].set:
+    # a dynamic-update-slice across the vocab-sharded dim would force GSPMD
+    # to gather the full logits (67 GB f32 for seamless; see §Perf)
+    if lf.shape[-1] > vocab:
+        mask = jnp.arange(lf.shape[-1]) < vocab
+        lf = jnp.where(mask, lf, -1e30)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0) & (labels < vocab)
+    ce = jnp.where(valid, lse - picked, 0.0)
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(valid), 1)

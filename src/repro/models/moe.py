@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN (mixtral-8x22b, qwen3-moe) — GShard-style dense
+dispatch with capacity, grouped to bound the one-hot tensors.
+
+Sharding strategy is chosen per arch by divisibility (DESIGN.md §3.2):
+* qwen3 (128 experts, 16-way model axis) → **EP**: experts sharded over
+  ``model``; the dispatch einsum induces the all-to-all.
+* mixtral (8 experts, 16-way model axis) → **TP-MoE**: experts replicated,
+  per-expert ffn dim sharded over ``model`` (classic Megatron within expert).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef
+
+
+def moe_defs(cfg) -> dict:
+    import math
+    d = cfg.d_model
+    E = cfg.n_experts
+    ff = cfg.moe_ff or cfg.d_ff
+    res = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "router": ParamDef((d, E), ("embed", None), dtype=jnp.float32,
+                           init="scaled"),
+        "w1": ParamDef((E, d, ff), ("experts", "embed", "ffn"), init="scaled"),
+        "w3": ParamDef((E, d, ff), ("experts", "embed", "ffn"), init="scaled"),
+        "w2": ParamDef((E, ff, d), ("experts", "ffn", "embed"), init="scaled", scale=res),
+    }
+
+
+def moe_capacity(cfg, tokens_per_group: int) -> int:
+    cap = int(tokens_per_group * cfg.top_k / cfg.n_experts
+              * cfg.capacity_factor) + 1
+    # round up to a lane-friendly multiple
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def route_topk(logits: jax.Array, k: int, capacity: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Token-choice top-k routing with per-expert capacity.
+
+    logits: (G, S, E) f32 →
+      dispatch (G, S, E, C) one-hot, combine (G, S, E, C) weights,
+      aux_loss (load-balancing, Switch-style).
+    Tokens overflowing an expert's capacity are dropped for that expert
+    (standard GShard semantics).
+    """
+    G, S, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                    # (G,S,k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert queue: process
+    # choice ranks in order, tokens in sequence order (deterministic).
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)         # (G,S,k,E)
+    # flatten (k-major within token? choice rank 0 of all tokens first):
+    ohf = oh.transpose(0, 2, 1, 3).reshape(G, k * S, E)     # (G, k·S, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                     # slots before me
+    keep = (pos < capacity) & (ohf > 0)
+    slot = jnp.where(keep, pos, 0).astype(jnp.int32)
+    disp_f = keep.astype(jnp.float32)[..., None] * jax.nn.one_hot(
+        slot, capacity, dtype=jnp.float32) * ohf[..., None]  # (G,kS,E,C)
+    disp = disp_f.reshape(G, k, S, E, capacity).transpose(0, 2, 1, 3, 4)
+    dispatch = jnp.sum(disp, axis=2)                        # (G,S,E,C)
+    w = topv.transpose(0, 2, 1).reshape(G, k, S)            # (G,k,S)
+    combine = jnp.sum(disp * w[..., None, None].transpose(0, 2, 1, 3, 4),
+                      axis=2)                               # (G,S,E,C)
+
+    # Switch aux loss: E · Σ_e fraction_tokens_e · mean_prob_e
+    frac = jnp.mean(jnp.sum(oh, axis=2), axis=(0, 1))       # (E,)
+    mprob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mprob) / k
+    return dispatch, combine, aux
+
+
+def moe_ffn(p, x: jax.Array, cfg, constrain=lambda x, l: x,
+            group_size: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) → (B,S,d), aux_loss.  Groups bound dispatch memory."""
+    B, S, d = x.shape
+    T = B * S
+    g = min(group_size or cfg.moe_group, T)
+    while T % g != 0:
+        g //= 2
+    G = T // g
+    xg = x.reshape(G, g, d)
+    if cfg.moe_dispatch == "sort":
+        return moe_ffn_sorted(p, xg, cfg, constrain, (B, S, d))
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G,g,E)
+    C = moe_capacity(cfg, g)
+    dispatch, comb, aux = route_topk(logits, cfg.top_k, C)
+    ddtype = x.dtype
+    # dispatch tokens to experts: (G,g,E,C)×(G,g,d) → (E,G,C,d).
+    # NB: activation constraints use *_act logical axes (experts_act →
+    # model when EP divides, ffn_act → model for TP-MoE); the token dims
+    # stay on the data axes they came from.
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(ddtype), xg)
+    xe = constrain(xe, ("experts_act", "batch", None, None))
+    h = jnp.einsum("egcd,edf->egcf", xe, p["w1"])
+    h3 = jnp.einsum("egcd,edf->egcf", xe, p["w3"])
+    h = jax.nn.silu(h) * h3
+    h = constrain(h, ("experts_act", "batch", None, "ffn_act"))
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w2"])
+    ye = constrain(ye, ("experts_act", "batch", None, None))
+    y = jnp.einsum("egcd,gsec->gsd", ye, comb.astype(ddtype))
+    return y.reshape(B, S, d), aux
+
+
+def moe_ffn_sorted(p, xg: jax.Array, cfg, constrain, out_shape
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based dispatch (§Perf hillclimb, beyond-paper optimization).
+
+    The GShard one-hot dispatch costs 2·E·C·d FLOPs *per token* (the one-hot
+    einsums), which for qwen3 (E=128, C≈40) is ~10× the active expert
+    compute.  Sorting the (token, choice) slots by expert id replaces both
+    one-hot einsums with O(T·k·d) gathers/scatters:
+
+      1. top-k route → (G, g·k) expert ids + weights
+      2. stable argsort by expert id within each group (G-parallel)
+      3. position-in-expert via segment arithmetic; drop beyond capacity
+      4. batched scatter  → xe (G, E, C, d)   [E constrained → model = a2a]
+      5. expert GEMMs     → ye (G, E, C, f→d)
+      6. gather + inverse permutation + top-k-weighted sum back to tokens
+
+    Same capacity/dropping semantics as the one-hot path (tested equal).
+    """
+    G, g, d = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, g)
+    logits = (xg @ p["router"]).astype(jnp.float32)           # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                      # (G,g,k)
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # flatten slots in CHOICE-MAJOR order (choice 0 of all tokens first) so
+    # capacity dropping prefers primary routes — same priority as route_topk
+    flat_e = topi.transpose(0, 2, 1).reshape(G, k * g)        # (G, k·g)
+    flat_w = topv.transpose(0, 2, 1).reshape(G, k * g)
+    flat_tok = jnp.broadcast_to(jnp.arange(g), (G, k, g)).reshape(G, k * g)
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)          # (G, k·g)
+    se = jnp.take_along_axis(flat_e, order, 1)
+    sw = jnp.take_along_axis(flat_w, order, 1)
+    stok = jnp.take_along_axis(flat_tok, order, 1)
+
+    # position within each expert segment of the sorted slot list
+    idx = jnp.arange(k * g)
+    new_seg = jnp.concatenate(
+        [jnp.ones((G, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(jnp.where(new_seg, idx, 0), axis=1)
+    pos = idx - seg_start                                     # (G, k·g)
+    keep = pos < C
+    posc = jnp.where(keep, pos, 0)
+    sec = jnp.where(keep, se, 0)
+
+    # 4. scatter tokens into expert slots (batched over G).  The scatter
+    # itself must stay in a (G:data, E:LOCAL) layout — scattering onto a
+    # model-sharded E dim makes GSPMD replicate the whole tensor
+    # ("involuntary full rematerialization").  The E-axis constraint is
+    # applied AFTER the scatter: one clean all-to-all into the GEMM layout.
+    gath = jnp.take_along_axis(xg, stok[..., None], axis=1)   # (G, k·g, d)
+    gath = jnp.where(keep[..., None], gath, 0)
+    xe = jnp.zeros((G, E, C, d), xg.dtype)
+    gi = jnp.broadcast_to(jnp.arange(G)[:, None], (G, k * g))
+    xe = xe.at[gi, sec, posc].add(gath)
+    xe = constrain(xe, ("batch", None, None, None))           # scatter local
+    xe = constrain(xe, ("batch", "experts_act", None, None))  # a2a to EP
+
+    # 5. expert GEMMs
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    h3 = jnp.einsum("gecd,edf->gecf", xe, p["w3"])
+    h = jax.nn.silu(h) * h3
+    h = constrain(h, ("batch", "experts_act", None, "ffn_act"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    ye = constrain(ye, ("batch", "experts_act", None, None))
+    # back to the gather-local layout (reverse all-to-all) before indexing
+    ye = constrain(ye, ("batch", None, None, None))
+
+    # 6. gather back, unsort, weighted sum over the k choices
+    y_slots = ye[gi, sec, posc] * (sw * keep).astype(ye.dtype)[..., None]
+    inv = jnp.argsort(order, axis=1)
+    y_unsorted = jnp.take_along_axis(y_slots, inv[..., None], axis=1)
+    y = y_unsorted.reshape(G, k, g, d).sum(axis=1)
+
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(oh, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1))) / k
+    return y.reshape(out_shape), aux

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (recurrentgemma-2b): gated linear recurrence +
+GeGLU, sharing the linear-scan machinery with the Mamba block.
+
+h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ u_t),
+a_t = exp(−c · softplus(Λ) · σ(r_t)),  c = 8.
+
+The paper's (Griffin) gate projections are block-diagonal; we use dense
+projections of the same shape class (documented simplification — parameter
+count within 2%).  Pallas kernel: ``kernels/rglru_scan``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, rms_norm
+from .ssm import causal_conv1d, linear_scan
+
+_C = 8.0
+
+
+def rglru_defs(cfg) -> dict:
+    import math
+    d, w, K = cfg.d_model, cfg.lru_width or cfg.d_model, 4
+    res = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    return {
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+        "w_in": ParamDef((d, w), ("embed", "lru"), init="scaled"),
+        "w_gate": ParamDef((d, w), ("embed", "lru"), init="scaled"),
+        "conv_w": ParamDef((K, w), (None, "lru"), init="scaled", scale=0.5),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        "w_r": ParamDef((w, w), ("lru_in", "lru"), init="scaled"),
+        "b_r": ParamDef((w,), ("lru",), dtype=jnp.float32, init="zeros"),
+        "w_i": ParamDef((w, w), ("lru_in", "lru"), init="scaled"),
+        "b_i": ParamDef((w,), ("lru",), dtype=jnp.float32, init="zeros"),
+        "lam": ParamDef((w,), ("lru",), dtype=jnp.float32, init="ones"),
+        "w_out": ParamDef((w, d), ("lru", "embed"), init="scaled", scale=res),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, W) f32
+    conv_tail: jax.Array  # (B, K−1, W)
+
+
+def rglru_init_state(cfg, batch: int) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv_tail=jnp.zeros((batch, 3, w), jnp.bfloat16))
+
+
+def _gates(p, u: jax.Array):
+    r = jax.nn.sigmoid((u @ p["w_r"]).astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gate_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, gate_in * i * u.astype(jnp.float32)
+
+
+def rglru_block(p, x: jax.Array, cfg,
+                state: Optional[RGLRUState] = None,
+                return_state: bool = False):
+    """Full-sequence recurrent block. x: (B,S,d) → (B,S,d)."""
+    h_in = rms_norm(x, p["norm"])
+    u = h_in @ p["w_in"]                                     # (B,S,W)
+    gate = jax.nn.gelu(h_in @ p["w_gate"])
+    tail = state.conv_tail if state is not None else None
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"], tail)
+    a, b = _gates(p, u)                                      # (B,S,W) f32
+    h0 = state.h if state is not None else None
+    hs = linear_scan(a, b, h0=h0, axis=1)                    # (B,S,W) f32
+    y = hs.astype(x.dtype) * gate
+    out = y @ p["w_out"]
+    if not return_state:
+        return x + out
+    K = 4
+    new_tail = jnp.concatenate([
+        (state.conv_tail if state is not None else
+         jnp.zeros((x.shape[0], K - 1, u.shape[-1]), x.dtype)),
+        (h_in @ p["w_in"])], axis=1)[:, -(K - 1):, :]
+    return x + out, RGLRUState(h=hs[:, -1], conv_tail=new_tail)
+
+
+def rglru_decode_step(p, x: jax.Array, state: RGLRUState, cfg
+                      ) -> Tuple[jax.Array, RGLRUState]:
+    """One-token step. x: (B,d)."""
+    h_in = rms_norm(x, p["norm"])
+    u_raw = h_in @ p["w_in"]                                 # (B,W)
+    gate = jax.nn.gelu(h_in @ p["w_gate"])
+    window = jnp.concatenate([state.conv_tail, u_raw[:, None, :]], axis=1)
+    u = jnp.sum(window.astype(jnp.float32)
+                * p["conv_w"].astype(jnp.float32)[None], axis=1) \
+        + p["conv_b"].astype(jnp.float32)
+    u = u.astype(x.dtype)
+    a, b = _gates(p, u)
+    h = a * state.h + b
+    y = h.astype(x.dtype) * gate
+    out = y @ p["w_out"]
+    return x + out, RGLRUState(h=h, conv_tail=window[:, 1:, :])

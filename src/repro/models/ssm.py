@@ -1,0 +1,195 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b) + shared linear-recurrence
+helpers (also used by the RG-LRU block).
+
+Train/prefill use ``jax.lax.associative_scan`` over the sequence (log-depth,
+TPU-friendly); decode advances the recurrence one step.  The Pallas kernel
+``kernels/ssm_scan`` implements the chunked scan with VMEM tiling; the
+functions here are its oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef
+
+
+def _assoc_scan(a: jax.Array, b: jax.Array, axis: int) -> jax.Array:
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return h
+
+
+@jax.custom_vjp
+def _linear_scan_cvjp(a: jax.Array, b: jax.Array) -> jax.Array:
+    return _assoc_scan(a, b, 1)
+
+
+def _ls_fwd(a, b):
+    h = _assoc_scan(a, b, 1)
+    return h, (a, h)
+
+
+def _ls_bwd(res, g):
+    # h_t = a_t h_{t−1} + b_t  ⇒  ∂L/∂b_t = γ_t with the *reverse* recurrence
+    # γ_t = g_t + a_{t+1} γ_{t+1}; ∂L/∂a_t = γ_t · h_{t−1}.
+    # Implemented as another associative scan (O(S) live memory — without
+    # this custom vjp, differentiating associative_scan retains every
+    # log-depth level: ~log₂(S)× the pair size; see EXPERIMENTS.md §Perf).
+    a, h = res
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    rev = lambda x: jnp.flip(x, axis=1)
+    gamma = rev(_assoc_scan(rev(a_next), rev(g), 1))
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    return gamma * h_prev, gamma
+
+
+_linear_scan_cvjp.defvjp(_ls_fwd, _ls_bwd)
+
+
+def linear_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None,
+                axis: int = 1) -> jax.Array:
+    """h_t = a_t ⊙ h_{t−1} + b_t  along ``axis`` via associative scan.
+
+    a, b: (..., S, ...) with the scan along ``axis``; returns all h_t.
+    axis=1 uses a custom VJP whose backward is itself a reverse associative
+    scan (memory O(S), not O(S·log S)).
+    """
+    if h0 is not None:
+        # fold h0 into the first b: h_1 = a_1 h0 + b_1
+        first = jax.lax.index_in_dim(b, 0, axis=axis, keepdims=True) + \
+            jax.lax.index_in_dim(a, 0, axis=axis, keepdims=True) * \
+            jnp.expand_dims(h0, axis)
+        rest = jax.lax.slice_in_dim(b, 1, None, axis=axis)
+        b = jnp.concatenate([first, rest], axis=axis)
+    if axis == 1:
+        return _linear_scan_cvjp(a, b)
+    return _assoc_scan(a, b, axis)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (K,C), b (C,).
+
+    ``tail`` (B,K−1,C) — previous context for decode/chunked prefill.
+    Implemented as K shifted adds (K small: 4) — fusion-friendly.
+    """
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, S+K−1, C)
+    S = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        y = y + xp[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+
+def mamba_defs(cfg) -> dict:
+    import math
+    d, di, N, dr, K = (cfg.d_model, cfg.dinner, cfg.ssm_state, cfg.dtrank,
+                       cfg.ssm_conv)
+    f32 = jnp.float32
+    res = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    return {
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+        "in_proj": ParamDef((d, 2 * di), ("embed", "inner2"), init="scaled"),
+        "conv_w": ParamDef((K, di), (None, "inner"), init="scaled", scale=0.5),
+        "conv_b": ParamDef((di,), ("inner",), init="zeros"),
+        "x_proj": ParamDef((di, dr + 2 * N), ("inner", None), init="scaled"),
+        "dt_proj": ParamDef((dr, di), (None, "inner"), init="scaled"),
+        "dt_bias": ParamDef((di,), ("inner",), dtype=f32, init="zeros"),
+        "A_log": ParamDef((di, N), ("inner", None), dtype=f32, init="ones"),
+        "D": ParamDef((di,), ("inner",), dtype=f32, init="ones"),
+        "out_proj": ParamDef((di, d), ("inner", "embed"), init="scaled", scale=res),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jax.Array         # (B, di, N) f32
+    conv_tail: jax.Array  # (B, K−1, di)
+
+
+def mamba_init_state(cfg, batch: int) -> MambaState:
+    return MambaState(
+        h=jnp.zeros((batch, cfg.dinner, cfg.ssm_state), jnp.float32),
+        conv_tail=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.dinner), jnp.bfloat16))
+
+
+def _ssm_inputs(p, x_c: jax.Array, cfg):
+    """Common discretization: returns (a, b_in, C, x_c) with
+    a, b: (B,S,di,N)."""
+    dr, N = cfg.dtrank, cfg.ssm_state
+    xdbl = x_c @ p["x_proj"]                                # (B,S,dr+2N)
+    dt, Bc, Cc = jnp.split(xdbl, [dr, dr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])  # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di,N)
+    a = jnp.exp(dt[..., None] * A)                          # (B,S,di,N)
+    b = (dt[..., None] * Bc[..., None, :].astype(jnp.float32)
+         * x_c[..., None].astype(jnp.float32))              # (B,S,di,N)
+    return a, b, Cc
+
+
+def mamba_block(p, x: jax.Array, cfg,
+                state: Optional[MambaState] = None,
+                return_state: bool = False):
+    """Full-sequence Mamba block. x: (B,S,d) → (B,S,d) (+ new state)."""
+    from .layers import rms_norm
+    h_in = rms_norm(x, p["norm"])
+    xz = h_in @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    tail = state.conv_tail if state is not None else None
+    x_c = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"], tail))
+    a, b, Cc = _ssm_inputs(p, x_c, cfg)
+    h0 = state.h if state is not None else None
+    hs = linear_scan(a, b, h0=h0, axis=1)                   # (B,S,di,N) f32
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc.astype(jnp.float32))
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return x + out
+    K = cfg.ssm_conv
+    new_state = MambaState(
+        h=hs[:, -1],
+        conv_tail=jnp.concatenate([
+            (state.conv_tail if state is not None else
+             jnp.zeros((x.shape[0], K - 1, cfg.dinner), x.dtype)),
+            x_in], axis=1)[:, -(K - 1):, :])
+    return x + out, new_state
+
+
+def mamba_decode_step(p, x: jax.Array, state: MambaState, cfg
+                      ) -> Tuple[jax.Array, MambaState]:
+    """One-token step. x: (B,d) → (B,d)."""
+    from .layers import rms_norm
+    h_in = rms_norm(x, p["norm"])
+    xz = h_in @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                     # (B,di)
+    # conv over [tail, x]
+    K = cfg.ssm_conv
+    window = jnp.concatenate([state.conv_tail, x_in[:, None, :]], axis=1)
+    x_c = jnp.sum(window.astype(jnp.float32)
+                  * p["conv_w"].astype(jnp.float32)[None], axis=1) \
+        + p["conv_b"].astype(jnp.float32)
+    x_c = jax.nn.silu(x_c).astype(x.dtype)                  # (B,di)
+    a, b, Cc = _ssm_inputs(p, x_c[:, None, :], cfg)
+    a, b, Cc = a[:, 0], b[:, 0], Cc[:, 0]                   # (B,di,N),(B,N)
+    h = a * state.h + b
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return x + out, MambaState(h=h, conv_tail=window[:, 1:, :])

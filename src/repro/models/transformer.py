@@ -1,0 +1,580 @@
+"""Model assembly for all ten assigned architectures.
+
+One :class:`Model` drives five families off a shared decoder substrate:
+
+* ``dense``  — GQA decoder (mistral-large, internlm2, h2o-danube (SWA),
+               smollm)
+* ``moe``    — GQA decoder with MoE FFN (mixtral (SWA), qwen3-moe)
+* ``ssm``    — Mamba-1 stack, attention-free (falcon-mamba)
+* ``hybrid`` — RG-LRU ⊕ local attention, pattern (rec, rec, attn)
+               (recurrentgemma)
+* ``encdec`` — encoder–decoder with cross-attention; audio frontend stubbed
+               as precomputed frame embeddings (seamless-m4t)
+* ``vlm``    — decoder with prepended patch embeddings; ViT frontend stubbed
+               (internvl2)
+
+Everything is scan-over-layers (compile-time O(1) in depth) with
+configurable remat.  The functional API is
+
+    train_loss(params, batch)                 → scalar loss
+    prefill(params, batch)                    → (cache, last_logits)
+    decode_step(params, cache, batch)         → (cache', logits)
+
+``batch`` layouts per family are produced by ``launch/specs.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_chunked, attn_decode, attn_full
+from .config import ModelConfig
+from .layers import (ParamDef, init_params, abstract_params, rms_norm, rotary,
+                     softmax_cross_entropy, swiglu)
+from .moe import moe_defs, moe_ffn
+from .rglru import (RGLRUState, rglru_block, rglru_decode_step, rglru_defs,
+                    rglru_init_state)
+from .ssm import (MambaState, mamba_block, mamba_decode_step, mamba_defs,
+                  mamba_init_state)
+
+PyTree = Any
+
+
+def _stack_defs(defs: PyTree, n: int) -> PyTree:
+    """Prepend a stacked ``layers`` dim to every ParamDef (scan weights)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical,
+                           dtype=d.dtype, init=d.init, scale=d.scale,
+                           fan_in=d.fan_in or (d.shape[-2]
+                                               if len(d.shape) >= 2
+                                               else d.shape[-1])),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    """3-D head-major projections: divisibility fallback must check the
+    HEAD COUNT (smollm's 15, rg's 10), not the fused H·hd dim.
+
+    Residual-branch outputs (wo, and w2 in _mlp_defs) are scaled by
+    1/√(2L) (GPT-2 init): without it the per-layer backward Jacobian
+    exceeds 1 and gradients grow ~2^L with depth (observed: gnorm 5e6 at
+    L=12 with varied tokens — tests/test_models_smoke.py guards this)."""
+    import math
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    res = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "wq": ParamDef((d, H, hd), ("embed", "heads", None), init="scaled",
+                       fan_in=d),
+        "wk": ParamDef((d, KV, hd), ("embed", "kv", None), init="scaled",
+                       fan_in=d),
+        "wv": ParamDef((d, KV, hd), ("embed", "kv", None), init="scaled",
+                       fan_in=d),
+        "wo": ParamDef((H, hd, d), ("heads", None, "embed"), init="scaled",
+                       scale=res, fan_in=H * hd),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    import math
+    d, ff = cfg.d_model, cfg.d_ff
+    res = 1.0 / math.sqrt(2.0 * max(cfg.n_layers, 1))
+    return {
+        "ln": ParamDef((d,), ("embed",), init="ones"),
+        "w1": ParamDef((d, ff), ("embed", "ffn"), init="scaled"),
+        "w3": ParamDef((d, ff), ("embed", "ffn"), init="scaled"),
+        "w2": ParamDef((ff, d), ("ffn", "embed"), init="scaled", scale=res),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    rules: Any = None  # ShardingRules | None
+
+    # ------------------------------------------------------------------ defs
+    def _layer_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return mamba_defs(cfg)
+        base = {"attn": _attn_defs(cfg)}
+        if cfg.family == "moe":
+            base["moe"] = moe_defs(cfg)
+        else:
+            base["mlp"] = _mlp_defs(cfg)
+        return base
+
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d, Vp = cfg.d_model, cfg.padded_vocab
+        out: Dict[str, Any] = {
+            "embed": ParamDef((Vp, d), ("vocab", "embed"), init="normal"),
+            "final_norm": ParamDef((d,), ("embed",), init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            out["unembed"] = ParamDef((d, Vp), ("embed", "vocab"),
+                                      init="scaled")
+        if cfg.family == "hybrid":
+            unit = {
+                "r0": rglru_defs(cfg), "r0_mlp": _mlp_defs(cfg),
+                "r1": rglru_defs(cfg), "r1_mlp": _mlp_defs(cfg),
+                "a": _attn_defs(cfg), "a_mlp": _mlp_defs(cfg),
+            }
+            n_units = cfg.n_layers // 3
+            rem = cfg.n_layers - 3 * n_units
+            out["units"] = _stack_defs(unit, n_units)
+            for i in range(rem):
+                out[f"tail_r{i}"] = rglru_defs(cfg)
+                out[f"tail_r{i}_mlp"] = _mlp_defs(cfg)
+        elif cfg.family == "encdec":
+            enc_layer = {"attn": _attn_defs(cfg), "mlp": _mlp_defs(cfg)}
+            dec_layer = {"attn": _attn_defs(cfg), "cross": _attn_defs(cfg),
+                         "mlp": _mlp_defs(cfg)}
+            out["enc_layers"] = _stack_defs(enc_layer, cfg.enc_layers)
+            out["enc_norm"] = ParamDef((d,), ("embed",), init="ones")
+            out["dec_layers"] = _stack_defs(dec_layer, cfg.n_layers)
+        else:
+            out["layers"] = _stack_defs(self._layer_defs(), cfg.n_layers)
+        return out
+
+    def init(self, key: jax.Array) -> PyTree:
+        return init_params(self.param_defs(), key)
+
+    def abstract(self) -> PyTree:
+        return abstract_params(self.param_defs())
+
+    # ------------------------------------------------------------ helpers
+    def _constrain(self, x, logical):
+        if self.rules is None:
+            return x
+        return self.rules.constrain(x, logical)
+
+    def _remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        if self.cfg.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        return jax.checkpoint(fn)
+
+    def _scan(self, fn, carry, xs):
+        """lax.scan over stacked layer params — or a python unroll when
+        ``cfg.scan_layers`` is False (roofline layer-differencing compiles,
+        where while-loop bodies would be cost-counted only once)."""
+        if self.cfg.scan_layers:
+            return jax.lax.scan(fn, carry, xs)
+        n = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(n):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            carry, y = fn(carry, sl)
+            ys.append(y)
+        if not ys or ys[0] is None:
+            return carry, None
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        return carry, stacked
+
+    # -------------------------------------------------------- sublayers
+    def _attn_seq(self, p, x, positions, window: int, causal: bool = True):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        h = rms_norm(x, p["ln"])
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+        q, k = rotary(q, k, positions)
+        q = self._constrain(q, ("batch", None, "heads_act", None))
+        if not causal:
+            # bidirectional (encoder): streamed softmax for long frames
+            o = _attn_bidir(q, k, v, chunk=cfg.attn_chunk
+                            if cfg.scan_layers else 0)
+        elif S > cfg.attn_chunk:
+            # unrolled (static block-skip) when layers are unrolled too —
+            # the roofline diff path; see attn_chunked docstring
+            unroll = not cfg.scan_layers
+            chunk = cfg.attn_chunk
+            if unroll:  # cap block count so diff compiles stay small
+                while S // chunk > 8:
+                    chunk *= 2
+            o = attn_chunked(q, k, v, window=window, chunk=chunk,
+                             remat_inner=cfg.remat != "none", unroll=unroll)
+        else:
+            o = attn_full(q, k, v, window=window)
+        return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    def _cross_seq(self, p, x, mem, positions):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        Sm = mem.shape[1]
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        h = rms_norm(x, p["ln"])
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+        o = _attn_bidir(q, k, v, chunk=cfg.attn_chunk
+                        if cfg.scan_layers else 0)
+        return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    def _mlp(self, p, x):
+        h = rms_norm(x, p["ln"])
+        y = swiglu(h, p["w1"], p["w3"], p["w2"],
+                   constrain=lambda t: self._constrain(
+                       t, ("batch", None, "ffn_act")))
+        return x + y
+
+    def _moe(self, p, x):
+        h = rms_norm(x, p["ln"])
+        y, aux = moe_ffn(p, h, self.cfg, constrain=self._constrain)
+        return x + y, aux
+
+    # ------------------------------------------------------- backbone (seq)
+    def backbone(self, params, x, positions) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward. x: (B,S,d) embedded → (B,S,d), aux_loss."""
+        cfg = self.cfg
+
+        if cfg.family == "ssm":
+            def layer(xc, lp):
+                xc = mamba_block(lp, xc, cfg)
+                xc = self._constrain(xc, ("batch", "seq_sp", None))
+                return xc, jnp.zeros((), jnp.float32)
+        elif cfg.family == "moe":
+            def layer(xc, lp):
+                xc = self._attn_seq(lp["attn"], xc, positions, cfg.window)
+                xc, aux = self._moe(lp["moe"], xc)
+                xc = self._constrain(xc, ("batch", "seq_sp", None))
+                return xc, aux
+        elif cfg.family == "hybrid":
+            def unit(xc, lp):
+                for r in ("r0", "r1"):
+                    xc = rglru_block(lp[r], xc, cfg)
+                    xc = self._mlp(lp[f"{r}_mlp"], xc)
+                xc = self._attn_seq(lp["a"], xc, positions, cfg.local_window)
+                xc = self._mlp(lp["a_mlp"], xc)
+                xc = self._constrain(xc, ("batch", "seq_sp", None))
+                return xc, jnp.zeros((), jnp.float32)
+            xc, auxs = self._scan(self._remat(unit), x, params["units"])
+            aux = jnp.sum(auxs)
+            i = 0
+            while f"tail_r{i}" in params:
+                xc = rglru_block(params[f"tail_r{i}"], xc, cfg)
+                xc = self._mlp(params[f"tail_r{i}_mlp"], xc)
+                i += 1
+            return xc, aux
+        else:  # dense / vlm decoder
+            def layer(xc, lp):
+                xc = self._attn_seq(lp["attn"], xc, positions, cfg.window)
+                xc = self._mlp(lp["mlp"], xc)
+                xc = self._constrain(xc, ("batch", "seq_sp", None))
+                return xc, jnp.zeros((), jnp.float32)
+
+        xc, auxs = self._scan(self._remat(layer), x, params["layers"])
+        return xc, jnp.sum(auxs)
+
+    def _encoder(self, params, frames) -> jax.Array:
+        """Bidirectional encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        B, Sm, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(Sm), (B, Sm))
+
+        def layer(xc, lp):
+            xc = self._attn_seq(lp["attn"], xc, positions, 0, causal=False)
+            xc = self._mlp(lp["mlp"], xc)
+            return xc, None
+
+        x, _ = self._scan(self._remat(layer), frames, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"])
+
+    def _decoder_ed(self, params, x, mem, positions) -> jax.Array:
+        def layer(xc, lp):
+            xc = self._attn_seq(lp["attn"], xc, positions, self.cfg.window)
+            xc = self._cross_seq(lp["cross"], xc, mem, positions)
+            xc = self._mlp(lp["mlp"], xc)
+            return xc, None
+
+        x, _ = self._scan(self._remat(layer), x, params["dec_layers"])
+        return x
+
+    # ------------------------------------------------------------- embed/out
+    def _embed_batch(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """→ (x (B,S,d), positions (B,S))."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(x.dtype)      # (B,P,d)
+            x = jnp.concatenate([patches, x], axis=1)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self._constrain(x, ("batch", "seq_sp", None))
+        return x, positions
+
+    def _logits(self, params, x) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return x @ params["embed"].T
+        return x @ params["unembed"]
+
+    # ------------------------------------------------------------ train loss
+    def train_loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            mem = self._encoder(params, batch["frames"].astype(jnp.bfloat16))
+            x, positions = self._embed_batch(params, batch)
+            x = self._decoder_ed(params, x, mem, positions)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x, positions = self._embed_batch(params, batch)
+            x, aux = self.backbone(params, x, positions)
+        x = rms_norm(x, params["final_norm"])
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # only text positions carry labels
+            x = x[:, -labels.shape[1]:]
+        logits = self._logits(params, x)
+        loss = softmax_cross_entropy(logits, labels, cfg.vocab)
+        return loss + 0.01 * aux
+
+    # --------------------------------------------------------------- caches
+    def init_cache(self, batch_size: int, capacity: int) -> PyTree:
+        cfg = self.cfg
+        KV, hd = cfg.n_kv, cfg.hd
+        bf = jnp.bfloat16
+        if cfg.family == "ssm":
+            return {
+                "h": jnp.zeros((cfg.n_layers, batch_size, cfg.dinner,
+                                cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch_size,
+                                   cfg.ssm_conv - 1, cfg.dinner), bf),
+            }
+        if cfg.family == "hybrid":
+            n_units = cfg.n_layers // 3
+            rem = cfg.n_layers - 3 * n_units
+            w = cfg.lru_width or cfg.d_model
+            sc = min(capacity, cfg.local_window)
+            return {
+                "h": jnp.zeros((n_units, 2, batch_size, w), jnp.float32),
+                "conv": jnp.zeros((n_units, 2, batch_size, 3, w), bf),
+                "k": jnp.zeros((n_units, batch_size, sc, KV, hd), bf),
+                "v": jnp.zeros((n_units, batch_size, sc, KV, hd), bf),
+                "kpos": jnp.full((batch_size, sc), -1, jnp.int32),
+                "tail_h": jnp.zeros((max(rem, 1), batch_size, w), jnp.float32),
+                "tail_conv": jnp.zeros((max(rem, 1), batch_size, 3, w), bf),
+            }
+        sc = min(capacity, cfg.window) if cfg.window else capacity
+        n_l = cfg.n_layers
+        cache = {
+            "k": jnp.zeros((n_l, batch_size, sc, KV, hd), bf),
+            "v": jnp.zeros((n_l, batch_size, sc, KV, hd), bf),
+            "kpos": jnp.full((batch_size, sc), -1, jnp.int32),
+        }
+        if cfg.family == "encdec":
+            sm = capacity // cfg.frame_ratio
+            cache["cross_k"] = jnp.zeros((n_l, batch_size, sm, KV, hd), bf)
+            cache["cross_v"] = jnp.zeros((n_l, batch_size, sm, KV, hd), bf)
+        return cache
+
+    # ---------------------------------------------------------- decode step
+    def _attn_dec(self, p, x, k_cache, v_cache, kpos, pos, window):
+        """x: (B,d); caches (B,Sc,KV,hd); returns (x', k', v')."""
+        cfg = self.cfg
+        B = x.shape[0]
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+        Sc = k_cache.shape[1]
+        h = rms_norm(x, p["ln"])
+        q = jnp.einsum("bd,dhk->bhk", h, p["wq"])[:, None]
+        k = jnp.einsum("bd,dhk->bhk", h, p["wk"])[:, None]
+        v = jnp.einsum("bd,dhk->bhk", h, p["wv"])[:, None]
+        q, k = rotary(q, k, pos[:, None])
+        q, k = q[:, 0], k[:, 0]
+        slot = jnp.where(window > 0, pos % Sc, jnp.minimum(pos, Sc - 1))
+        onehot = jax.nn.one_hot(slot, Sc, dtype=k_cache.dtype)  # (B,Sc)
+        k_cache = k_cache * (1 - onehot)[..., None, None] \
+            + k[:, None] * onehot[..., None, None]
+        v_cache = v_cache * (1 - onehot)[..., None, None] \
+            + v[:, 0][:, None] * onehot[..., None, None]
+        o = attn_decode(q, k_cache, v_cache, kpos, pos, window=window)
+        o = o.reshape(B, H, hd)
+        return (x + jnp.einsum("bhk,hkd->bd", o, p["wo"]), k_cache, v_cache)
+
+    def _mlp_dec(self, p, x):
+        h = rms_norm(x, p["ln"])
+        return x + swiglu(h, p["w1"], p["w3"], p["w2"])
+
+    def _moe_dec(self, p, x):
+        """MoE FFN for a single-token batch (B,d)."""
+        h = rms_norm(x, p["ln"])
+        y, _ = moe_ffn(p, h[:, None, :], self.cfg,
+                       constrain=self._constrain,
+                       group_size=x.shape[0])
+        return x + y[:, 0]
+
+    def decode_step(self, params, cache, batch) -> Tuple[PyTree, jax.Array]:
+        """One token for every sequence. batch = {"tokens": (B,), "pos": (B,)}."""
+        cfg = self.cfg
+        tokens, pos = batch["tokens"], batch["pos"]
+        x = params["embed"][tokens]                          # (B,d)
+        new_cache = dict(cache)
+
+        if cfg.family == "ssm":
+            def layer(xc, lp_state):
+                lp, h, conv = lp_state
+                xc, st = mamba_decode_step(
+                    lp, xc, MambaState(h=h, conv_tail=conv), cfg)
+                return xc, (st.h, st.conv_tail)
+            x, (hs, convs) = self._scan(
+                layer, x, (params["layers"], cache["h"], cache["conv"]))
+            new_cache.update(h=hs, conv=convs)
+
+        elif cfg.family == "hybrid":
+            Sc = cache["k"].shape[2]
+            slot = pos % Sc
+            kpos = _update_kpos(cache["kpos"], slot, pos)
+
+            def unit(xc, xs):
+                lp, h2, conv2, kc, vc = xs
+                outs_h, outs_c = [], []
+                for i, r in enumerate(("r0", "r1")):
+                    st = RGLRUState(h=h2[i], conv_tail=conv2[i])
+                    xc, st = rglru_decode_step(lp[r], xc, st, cfg)
+                    xc = self._mlp_dec(lp[f"{r}_mlp"], xc)
+                    outs_h.append(st.h)
+                    outs_c.append(st.conv_tail)
+                xc, kc, vc = self._attn_dec(lp["a"], xc, kc, vc, kpos, pos,
+                                            cfg.local_window)
+                xc = self._mlp_dec(lp["a_mlp"], xc)
+                return xc, (jnp.stack(outs_h), jnp.stack(outs_c), kc, vc)
+
+            x, (hs, convs, ks, vs) = self._scan(
+                unit, x, (params["units"], cache["h"], cache["conv"],
+                          cache["k"], cache["v"]))
+            new_cache.update(h=hs, conv=convs, k=ks, v=vs, kpos=kpos)
+            th, tc = [], []
+            i = 0
+            while f"tail_r{i}" in params:
+                st = RGLRUState(h=cache["tail_h"][i],
+                                conv_tail=cache["tail_conv"][i])
+                x, st = rglru_decode_step(params[f"tail_r{i}"], x, st, cfg)
+                x = self._mlp_dec(params[f"tail_r{i}_mlp"], x)
+                th.append(st.h)
+                tc.append(st.conv_tail)
+                i += 1
+            if th:
+                new_cache.update(tail_h=jnp.stack(th), tail_conv=jnp.stack(tc))
+
+        else:  # dense / moe / vlm / encdec decoders
+            Sc = cache["k"].shape[2]
+            slot = jnp.where(cfg.window > 0, pos % Sc, jnp.minimum(pos, Sc - 1))
+            kpos = _update_kpos(cache["kpos"], slot, pos)
+            is_ed = cfg.family == "encdec"
+
+            def layer(xc, xs):
+                if is_ed:
+                    lp, kc, vc, xk, xv = xs
+                else:
+                    lp, kc, vc = xs
+                xc, kc, vc = self._attn_dec(lp["attn"], xc, kc, vc, kpos, pos,
+                                            cfg.window)
+                if is_ed:
+                    xc = _cross_dec(self, lp["cross"], xc, xk, xv)
+                if cfg.family == "moe":
+                    xc = self._moe_dec(lp["moe"], xc)
+                else:
+                    xc = self._mlp_dec(lp["mlp"], xc)
+                return xc, (kc, vc)
+
+            xs = (params["dec_layers" if is_ed else "layers"],
+                  cache["k"], cache["v"])
+            if is_ed:
+                xs = xs + (cache["cross_k"], cache["cross_v"])
+            x, (ks, vs) = self._scan(layer, x, xs)
+            new_cache.update(k=ks, v=vs, kpos=kpos)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = self._logits(params, x)
+        return new_cache, logits
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, batch) -> Tuple[PyTree, jax.Array]:
+        """Process a full prompt; emit cache + last-position logits.
+
+        For the dry-run the cache is rebuilt by re-running layer projections
+        (ssm/hybrid keep final states; attention keeps K/V).  Implemented as
+        the full-sequence backbone with per-layer K/V captured via scan ys.
+        """
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            mem = self._encoder(params, batch["frames"].astype(jnp.bfloat16))
+            x, positions = self._embed_batch(params, batch)
+            x = self._decoder_ed(params, x, mem, positions)
+            xl = rms_norm(x[:, -1], params["final_norm"])
+            return {}, self._logits(params, xl)
+        x, positions = self._embed_batch(params, batch)
+        x, _ = self.backbone(params, x, positions)
+        xl = rms_norm(x[:, -1], params["final_norm"])
+        return {}, self._logits(params, xl)
+
+
+def _update_kpos(kpos: jax.Array, slot: jax.Array, pos: jax.Array) -> jax.Array:
+    onehot = jax.nn.one_hot(slot, kpos.shape[1], dtype=jnp.int32)
+    return kpos * (1 - onehot) + pos[:, None] * onehot
+
+
+def _cross_dec(model: Model, p, x, xk, xv):
+    cfg = model.cfg
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    h = rms_norm(x, p["ln"])
+    q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
+    Sm = xk.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(Sm), (B, Sm))
+    o = attn_decode(q, xk, xv, kpos, jnp.full((B,), Sm, jnp.int32))
+    return x + jnp.einsum("bhk,hkd->bd", o.reshape(B, H, hd), p["wo"])
+
+
+def _attn_bidir(q, k, v, chunk: int = 0):
+    """Non-causal attention (encoder / cross).  ``chunk > 0`` streams KV
+    blocks with a running softmax (O(Sq·chunk) live scores instead of
+    O(Sq·Sk)) — the flash pattern without masks."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    qg = q.reshape(B, Sq, KV, G, hd)
+    if chunk and Sk > chunk and Sk % chunk == 0:
+        import math
+        scale = 1.0 / math.sqrt(hd)
+        nk = Sk // chunk
+        kc = k.reshape(B, nk, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, nk, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+        @jax.checkpoint
+        def step(carry, kv):
+            m, l, acc = carry
+            k_blk, v_blk = kv
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(q.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, Sq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+                       jnp.float32(hd))
+    att = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", att, v)
+    return o.reshape(B, Sq, H, hd)

@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import cosine_schedule
+from .compress import quantize_int8, dequantize_int8, compressed_psum
+from .adaptive import AdaptiveAccumConfig, adaptive_accumulate
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "cosine_schedule", "quantize_int8", "dequantize_int8",
+           "compressed_psum", "AdaptiveAccumConfig", "adaptive_accumulate"]

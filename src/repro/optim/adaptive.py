@@ -1,0 +1,78 @@
+"""Adaptive gradient accumulation — the paper's ADS engine applied to
+training (DESIGN.md §3.1).
+
+SAMPLE() = one microbatch gradient; the frame holds (Σg, Σ‖g‖, Σ‖g‖², num);
+CHECKFORSTOP = :class:`repro.core.stopping.GradVarianceCondition` (stop once
+the relative standard error of the gradient-norm estimate is below target).
+The accumulated Σg/num is exactly the gradient the optimizer consumes, so
+adaptive accumulation composes with any optimizer.
+
+This is a *device-level* loop (lax.while_loop), bounded by ``max_micro`` so
+input data can be provisioned with a static shape; unconsumed microbatches
+are wasted only if the condition stops early — the adaptive win is that easy
+steps stop at ``min_micro`` while hard steps use the full budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.frames import StateFrame, combine, zeros_like_frame
+from ..core.stopping import GradVarianceCondition
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveAccumConfig:
+    rtol: float = 0.25
+    min_micro: int = 2
+    max_micro: int = 16
+
+
+def adaptive_accumulate(grad_fn: Callable[[PyTree, PyTree], Tuple[jax.Array, PyTree]],
+                        params: PyTree, micro_batches: PyTree,
+                        cfg: AdaptiveAccumConfig
+                        ) -> Tuple[PyTree, jax.Array, jax.Array, jax.Array]:
+    """micro_batches: pytree with leading dim ``max_micro``.
+
+    Returns (mean grads, mean loss, n_micro_used, rel_sem).
+    """
+    cond = GradVarianceCondition(rtol=cfg.rtol, min_samples=cfg.min_micro,
+                                 max_samples=cfg.max_micro)
+    g_shapes = jax.eval_shape(
+        lambda p, b: grad_fn(p, b)[1], params,
+        jax.tree.map(lambda x: x[0], micro_batches))
+    gsum0 = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), g_shapes)
+    frame0 = StateFrame(num=jnp.int32(0),
+                        data={"s1": jnp.zeros((), jnp.float32),
+                              "s2": jnp.zeros((), jnp.float32)})
+
+    def body(st):
+        i, gsum, frame, loss_sum, stop = st
+        batch = jax.tree.map(lambda x: x[i], micro_batches)
+        loss, g = grad_fn(params, batch)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                          for x in jax.tree.leaves(g)))
+        frame = combine(frame, StateFrame(
+            num=jnp.int32(1), data={"s1": gn, "s2": jnp.square(gn)}))
+        gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+        stop, _ = cond(frame)
+        return i + 1, gsum, frame, loss_sum + loss, stop
+
+    def cond_fn(st):
+        i, _, _, _, stop = st
+        return jnp.logical_and(i < cfg.max_micro, ~stop)
+
+    i, gsum, frame, loss_sum, _ = jax.lax.while_loop(
+        cond_fn, body,
+        (jnp.int32(0), gsum0, frame0, jnp.zeros((), jnp.float32),
+         jnp.zeros((), bool)))
+    n = jnp.maximum(i, 1).astype(jnp.float32)
+    grads = jax.tree.map(lambda x: x / n, gsum)
+    _, aux = cond(frame)
+    return grads, loss_sum / n, i, aux["rel_sem"]

@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak * s / max(warmup, 1)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,84 @@
+"""Fault-tolerance runtime for the host training loop.
+
+At thousand-node scale the interesting events are
+
+* **fail-stop** — a worker (or pod) dies: the loop must restore from the
+  last checkpoint and *replay the data cursor* (exactly-once semantics come
+  from the stateless pipeline, ``data/pipeline.py``).
+* **stragglers** — a slow worker: the epoch engine already absorbs these
+  *within* a step (frames carry their own ``num``; a slow worker publishes a
+  smaller frame — paper §3.3 / DESIGN.md §2).  Across steps, the
+  ``Heartbeat`` watchdog flags persistent stragglers for replacement.
+* **preemption** — same recovery path as fail-stop.
+
+On this single-process container the injector *simulates* the events so the
+recovery path is exercised end-to-end by tests and ``launch/train.py
+--inject-failures``; on a real fleet the same hooks attach to
+``jax.distributed`` runtime errors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class FailureEvent(enum.Enum):
+    NONE = "none"
+    WORKER_CRASH = "worker_crash"      # fail-stop → restore + replay
+    STRAGGLER = "straggler"            # slow worker → smaller frame
+    PREEMPTION = "preemption"          # planned eviction → checkpoint + exit
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    seed: int = 0
+    crash_prob: float = 0.0
+    straggler_prob: float = 0.0
+    preempt_at_step: Optional[int] = None
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def poll(self, step: int) -> FailureEvent:
+        if self.preempt_at_step is not None and step == self.preempt_at_step:
+            return FailureEvent.PREEMPTION
+        u = self._rng.random()
+        if u < self.crash_prob:
+            return FailureEvent.WORKER_CRASH
+        if u < self.crash_prob + self.straggler_prob:
+            return FailureEvent.STRAGGLER
+        return FailureEvent.NONE
+
+
+class Heartbeat:
+    """Wall-clock watchdog: flags steps exceeding ``deadline_s`` (straggler /
+    hang detection for the host loop)."""
+
+    def __init__(self, deadline_s: float,
+                 on_late: Optional[Callable[[float], None]] = None):
+        self.deadline_s = deadline_s
+        self.on_late = on_late or (lambda dt: None)
+        self._t0: Optional[float] = None
+        self._late_steps = 0
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> float:
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        if dt > self.deadline_s:
+            self._late_steps += 1
+            self.on_late(dt)
+        self._t0 = None
+        return dt
+
+    @property
+    def late_steps(self) -> int:
+        return self._late_steps

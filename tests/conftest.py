@@ -1,0 +1,6 @@
+import sys
+from pathlib import Path
+
+# NB: no XLA_FLAGS here — tests must see the real single CPU device
+# (the dry-run sets its own 512-device flag in its subprocess).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))

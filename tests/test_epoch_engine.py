@@ -1,0 +1,150 @@
+"""Epoch-engine semantics: consistency (Prop. 1), strategy equivalence,
+termination latency, and indexed-frame determinism (§D.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.epoch import EpochConfig, run_virtual, run_worker
+from repro.core.frames import (FrameStrategy, StateFrame,
+                               sequential_collectives, shard_frame_pad)
+from repro.core.stopping import HoeffdingCondition
+
+N = 8  # frame size
+
+
+def make_sample_fn(batch=4, n=N):
+    """Each round adds `batch` Bernoulli samples per slot."""
+
+    def sample_fn(key, carry):
+        x = (jax.random.uniform(key, (batch, n)) < 0.3).astype(jnp.int32)
+        return StateFrame(num=jnp.int32(batch), data=x.sum(0)), carry
+
+    return sample_fn
+
+
+def run(strategy, world, eps=0.05, seed=0, rounds=2):
+    n = shard_frame_pad(N, world) if strategy == FrameStrategy.SHARED_FRAME \
+        else N
+    cond = HoeffdingCondition(eps=eps, delta=0.1)
+    cfg = EpochConfig(strategy=strategy, rounds_per_epoch=rounds,
+                      max_epochs=4000)
+    sample_fn = make_sample_fn(n=n)
+    template = jnp.zeros((n,), jnp.int32)
+    if world == 1:
+        return run_worker(sample_fn, cond, template, None,
+                          jax.random.key(seed), cfg,
+                          colls=sequential_collectives(),
+                          seed_scalar=jnp.asarray(seed, jnp.uint32),
+                          worker_id=jnp.int32(0))
+    return run_virtual(sample_fn, cond, template, None, seed, world, cfg)
+
+
+@pytest.mark.parametrize("strategy", list(FrameStrategy))
+@pytest.mark.parametrize("world", [1, 4])
+def test_all_strategies_stop_and_are_consistent(strategy, world):
+    if strategy == FrameStrategy.LOCK and world > 1:
+        pytest.skip("lock analog is the W=1 oracle")
+    st = run(strategy, world)
+    stop = np.asarray(st.stop).reshape(-1)[0]
+    assert stop, "engine must stop once the Hoeffding bound holds"
+    num = np.asarray(st.total.num).reshape(-1)[0]
+    # consistency: the checked state is an integral number of whole rounds
+    batch, rounds = 4, 2
+    assert num % batch == 0
+    # Hoeffding needs τ ≥ (1/2ε²)·log(2/δ) = 599.0 for ε=.05, δ=.1
+    assert num >= 599
+    # and the engine shouldn't have oversampled by more than the lag window:
+    # one epoch of staleness × world × rounds × batch + one epoch
+    assert num <= 599 + 2 * world * rounds * batch + world * rounds * batch
+
+
+def test_epoch_lag_matches_paper():
+    """LOCAL/SHARED check one epoch behind BARRIER (termination latency,
+    App. C.3)."""
+    st_b = run(FrameStrategy.BARRIER, 1)
+    st_l = run(FrameStrategy.LOCAL_FRAME, 1)
+    eb = int(np.asarray(st_b.stop_epoch))
+    el = int(np.asarray(st_l.stop_epoch))
+    assert el == eb + 1
+
+
+def test_indexed_frame_deterministic_across_worlds():
+    """§D.2: identical stopping point and state for any worker count."""
+    results = {}
+    for world in (1, 2, 4, 8):
+        st = run(FrameStrategy.INDEXED_FRAME, world, seed=7)
+        num = np.asarray(st.total.num).reshape(-1)[0]
+        data = np.asarray(st.total.data)
+        data = data[0] if data.ndim > 1 else data
+        results[world] = (int(num), data.copy())
+    nums = {w: r[0] for w, r in results.items()}
+    assert len(set(nums.values())) == 1, f"τ* differs across worlds: {nums}"
+    base = results[1][1]
+    for w, (_, d) in results.items():
+        np.testing.assert_array_equal(d, base)
+
+
+def test_local_vs_shared_same_totals():
+    """SHARED_FRAME holds shards of exactly the LOCAL_FRAME total."""
+    st_l = run(FrameStrategy.LOCAL_FRAME, 4, seed=3)
+    st_s = run(FrameStrategy.SHARED_FRAME, 4, seed=3)
+    total_l = np.asarray(st_l.total.data)[0]
+    total_s = np.asarray(st_s.total.data).reshape(-1)[:N]
+    num_l = np.asarray(st_l.total.num)[0]
+    num_s = np.asarray(st_s.total.num)[0]
+    assert num_l == num_s
+    np.testing.assert_array_equal(total_l, total_s)
+
+
+def test_sequential_oracle_equals_barrier_w1():
+    """BARRIER at W=1 checks every epoch = sequential Algorithm 1."""
+    st = run(FrameStrategy.BARRIER, 1, seed=11)
+    st2 = run(FrameStrategy.BARRIER, 1, seed=11)
+    np.testing.assert_array_equal(np.asarray(st.total.data),
+                                  np.asarray(st2.total.data))
+
+
+@pytest.mark.parametrize("F", [1, 2, 4, 8])
+def test_shared_frame_f_sweep(F):
+    """Paper Fig. 3b semantics: any F divides the frame n/F per worker with
+    identical results (groups hold redundant copies of the global sum)."""
+    W = 8
+    pad = shard_frame_pad(N, F)
+
+    def sf(key, carry):
+        x = (jax.random.uniform(key, (4, N)) < 0.5).astype(jnp.int32)
+        return StateFrame(num=jnp.int32(4),
+                          data=jnp.pad(x.sum(0), (0, pad - N))), carry
+
+    cfg = EpochConfig(strategy=FrameStrategy.SHARED_FRAME,
+                      rounds_per_epoch=2, max_epochs=2000)
+    st = run_virtual(sf, HoeffdingCondition(eps=0.1, delta=0.1),
+                     jnp.zeros((pad,), jnp.int32), None, 0, W, cfg,
+                     frame_shards=F)
+    assert bool(np.asarray(st.stop)[0])
+    assert np.asarray(st.total.data).shape == (W, pad // F)
+    # every group holds the same global shard content
+    data = np.asarray(st.total.data)
+    for g in range(1, W // F):
+        np.testing.assert_array_equal(data[:F], data[g * F:(g + 1) * F])
+
+
+def test_run_adaptive_facade():
+    """Public API: all strategies through core.adaptive.run_adaptive."""
+    from repro.core.adaptive import run_adaptive
+
+    def sf(key, carry):
+        x = (jax.random.uniform(key, (4, N)) < 0.4).astype(jnp.int32)
+        return StateFrame(num=jnp.int32(4), data=x.sum(0)), carry
+
+    for strategy in ("local", "shared", "indexed"):
+        res = run_adaptive(sf, HoeffdingCondition(eps=0.1, delta=0.1),
+                           jnp.zeros((N,), jnp.int32), strategy=strategy,
+                           world=4, rounds_per_epoch=2)
+        assert res.stopped
+        assert res.num >= 149                  # Hoeffding τ for ε=.1, δ=.1
+        assert res.data.shape == (N,)
+        frac = res.data / res.num
+        assert np.all((frac > 0.25) & (frac < 0.55))

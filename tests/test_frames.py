@@ -1,0 +1,78 @@
+"""Frame semantics + the paper's associativity requirement (property-based)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.frames import (FrameStrategy, StateFrame, accumulate,
+                               axis_collectives, combine, shard_frame_pad,
+                               zeros_like_frame)
+
+
+def frame_of(arr):
+    return StateFrame(num=jnp.int32(arr.shape[0] if arr.ndim else 1),
+                      data=jnp.asarray(arr))
+
+
+def test_zeros_like_frame():
+    f = zeros_like_frame(jnp.ones((5,), jnp.int32))
+    assert int(f.num) == 0
+    np.testing.assert_array_equal(np.asarray(f.data), np.zeros(5))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=8),
+       st.lists(st.integers(-100, 100), min_size=1, max_size=8),
+       st.lists(st.integers(-100, 100), min_size=1, max_size=8))
+def test_combine_associative(a, b, c):
+    n = min(len(a), len(b), len(c))
+    fa, fb, fc = (StateFrame(num=jnp.int32(1),
+                             data=jnp.asarray(x[:n], jnp.int32))
+                  for x in (a, b, c))
+    left = combine(combine(fa, fb), fc)
+    right = combine(fa, combine(fb, fc))
+    assert int(left.num) == int(right.num) == 3
+    np.testing.assert_array_equal(np.asarray(left.data),
+                                  np.asarray(right.data))
+
+
+def test_accumulate_matches_loop():
+    rng = np.random.default_rng(0)
+    stack = rng.integers(0, 50, size=(7, 13)).astype(np.int32)
+    frames = StateFrame(num=jnp.ones((7,), jnp.int32),
+                        data=jnp.asarray(stack))
+    acc = accumulate(frames)
+    assert int(acc.num) == 7
+    np.testing.assert_array_equal(np.asarray(acc.data), stack.sum(0))
+
+
+def test_shard_frame_pad():
+    assert shard_frame_pad(10, 4) == 12
+    assert shard_frame_pad(8, 4) == 8
+    assert shard_frame_pad(1, 3) == 3
+
+
+def test_axis_collectives_vmap_psum_and_scatter():
+    colls = axis_collectives("w", 4)
+
+    def worker(x):
+        f = StateFrame(num=jnp.int32(1), data=x)
+        red = colls.reduce_frames(f)
+        sc = colls.scatter_frames(f)
+        gathered = colls.all_frames(f)
+        return red, sc, gathered
+
+    xs = jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
+    red, sc, gathered = jax.vmap(worker, axis_name="w")(xs)
+    # reduce: every worker sees the full sum
+    np.testing.assert_allclose(np.asarray(red.data),
+                               np.tile(xs.sum(0), (4, 1)))
+    assert np.all(np.asarray(red.num) == 4)
+    # scatter: worker i holds shard i of the sum
+    np.testing.assert_allclose(np.asarray(sc.data).reshape(-1),
+                               np.asarray(xs.sum(0)))
+    # gather: every worker sees all deltas
+    assert np.asarray(gathered.data).shape == (4, 4, 4)

@@ -1,0 +1,69 @@
+"""KADABRA end-to-end: (ε,δ) accuracy vs the exact Brandes oracle for every
+parallelization strategy — the paper's correctness claim (§2.3, Prop. 1)."""
+
+import numpy as np
+import pytest
+
+from repro.core.frames import FrameStrategy
+from repro.graphs import (KadabraParams, barabasi_albert, brandes_exact,
+                          erdos_renyi, grid2d, preprocess, run_kadabra)
+
+
+@pytest.fixture(scope="module")
+def er_graph():
+    g = erdos_renyi(60, 150, seed=1)
+    return g, brandes_exact(g)
+
+
+@pytest.mark.parametrize("strategy,world", [
+    (FrameStrategy.LOCK, 1),
+    (FrameStrategy.BARRIER, 4),
+    (FrameStrategy.LOCAL_FRAME, 1),
+    (FrameStrategy.LOCAL_FRAME, 4),
+    (FrameStrategy.SHARED_FRAME, 4),
+    (FrameStrategy.INDEXED_FRAME, 4),
+])
+def test_eps_accuracy(er_graph, strategy, world):
+    g, exact = er_graph
+    eps = 0.05
+    params = KadabraParams(eps=eps, delta=0.1, batch=32, rounds_per_epoch=2,
+                           max_epochs=2000)
+    btilde, st, pre = run_kadabra(g, params, strategy=strategy, world=world,
+                                  seed=3)
+    err = np.abs(btilde - exact).max()
+    # δ=0.1 failure probability; the fixed seed keeps this deterministic
+    assert err <= eps, f"{strategy} W={world}: max err {err} > ε"
+
+
+def test_preprocessing_vertex_diameter_bound():
+    g = grid2d(6, 6)
+    pre = preprocess(g, eps=0.05, delta=0.1)
+    # true diameter 10 ⇒ VD=11; double-sweep UB must dominate it
+    assert pre.vd_upper >= 11
+    assert pre.omega > 0
+
+
+def test_indexed_frame_reproducible_result():
+    g = barabasi_albert(50, 2, seed=4)
+    params = KadabraParams(eps=0.08, delta=0.1, batch=16, rounds_per_epoch=2,
+                           max_epochs=1500)
+    b1, st1, _ = run_kadabra(g, params,
+                             strategy=FrameStrategy.INDEXED_FRAME,
+                             world=2, seed=9)
+    b2, st2, _ = run_kadabra(g, params,
+                             strategy=FrameStrategy.INDEXED_FRAME,
+                             world=8, seed=9)
+    np.testing.assert_array_equal(b1, b2)
+
+
+def test_termination_uses_fewer_samples_than_omega_sometimes():
+    """The adaptive part must engage: on an easy instance stopping happens
+    before ω (otherwise we built static sampling, not ADS)."""
+    g = erdos_renyi(40, 400, seed=2)  # dense ⇒ tiny BC values ⇒ easy
+    params = KadabraParams(eps=0.05, delta=0.1, batch=64, rounds_per_epoch=1,
+                           max_epochs=2000)
+    btilde, st, pre = run_kadabra(g, params,
+                                  strategy=FrameStrategy.LOCAL_FRAME,
+                                  world=1, seed=0)
+    tau = float(np.asarray(st.total.num).reshape(-1)[0])
+    assert tau < pre.omega, (tau, pre.omega)

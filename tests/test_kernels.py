@@ -1,0 +1,117 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret=True executes the Pallas body in python on CPU)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import ref
+from repro.kernels.bfs_frontier import bfs_frontier
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.frame_accum import frame_accum
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssm_scan import ssm_scan
+
+
+# ---------------------------------------------------------------- frame_accum
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("w,n", [(1, 64), (4, 1000), (16, 257), (3, 8192)])
+def test_frame_accum_sweep(dtype, w, n):
+    key = jax.random.key(w * n)
+    if dtype == jnp.int32:
+        fr = jax.random.randint(key, (w, n), 0, 100, jnp.int32)
+    else:
+        fr = jax.random.normal(key, (w, n), jnp.float32).astype(dtype)
+    got = frame_accum(fr, block_n=256, interpret=True)
+    exp = ref.frame_accum_ref(fr)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 300))
+def test_frame_accum_property(w, n):
+    fr = jnp.arange(w * n, dtype=jnp.int32).reshape(w, n) % 97
+    got = frame_accum(fr, block_n=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(fr).sum(0))
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,hd,window", [
+    (1, 4, 2, 128, 64, 0),
+    (2, 4, 4, 256, 32, 0),     # MHA (kv = h)
+    (1, 8, 1, 128, 64, 0),     # MQA
+    (1, 4, 2, 256, 64, 64),    # sliding window
+])
+def test_flash_attention_sweep(dtype, b, h, kv, s, hd, window):
+    ks = jax.random.split(jax.random.key(s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), jnp.float32).astype(dtype)
+    got = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# -------------------------------------------------------------------- scans
+@pytest.mark.parametrize("b,s,d,n", [(1, 32, 64, 4), (2, 128, 256, 16),
+                                     (1, 17, 64, 8)])
+def test_ssm_scan_sweep(b, s, d, n):
+    ks = jax.random.split(jax.random.key(s), 2)
+    a = jax.random.uniform(ks[0], (b, s, d, n), minval=0.1, maxval=0.99)
+    bb = jax.random.normal(ks[1], (b, s, d, n))
+    got = ssm_scan(a, bb, block_d=64, interpret=True)
+    exp = ref.ssm_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,w", [(1, 64, 512), (2, 33, 1024)])
+def test_rglru_scan_sweep(b, s, w):
+    ks = jax.random.split(jax.random.key(w), 2)
+    a = jax.random.uniform(ks[0], (b, s, w), minval=0.2, maxval=0.95)
+    bb = jax.random.normal(ks[1], (b, s, w))
+    got = rglru_scan(a, bb, block_w=256, interpret=True)
+    exp = ref.rglru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_scan_kernel_matches_sequential_recurrence():
+    """Ground truth: explicit python recurrence."""
+    a = jnp.array([[[0.5], [0.25], [0.75]]])  # (1,3,1)
+    b = jnp.array([[[1.0], [2.0], [4.0]]])
+    got = np.asarray(rglru_scan(a, b, block_w=1, interpret=True))[0, :, 0]
+    h = 0.0
+    exp = []
+    for t in range(3):
+        h = float(a[0, t, 0]) * h + float(b[0, t, 0])
+        exp.append(h)
+    np.testing.assert_allclose(got, exp, rtol=1e-6)
+
+
+# ------------------------------------------------------------- bfs_frontier
+@pytest.mark.parametrize("n,m,seed", [(50, 120, 0), (200, 600, 1)])
+def test_bfs_frontier_sweep(n, m, seed):
+    from repro.graphs import erdos_renyi
+    g = erdos_renyi(n, m, seed=seed)
+    ks = jax.random.split(jax.random.key(seed), 2)
+    sigma = jax.random.uniform(ks[0], (n,))
+    dist = jax.random.randint(ks[1], (n,), 0, 6, jnp.int32)
+    for level in (0, 2, 5):
+        got = bfs_frontier(g.src, g.dst, sigma, dist, jnp.int32(level),
+                           block_e=64, interpret=True)
+        exp = ref.bfs_frontier_ref(g.src, g.dst, sigma, dist,
+                                   jnp.int32(level))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   atol=1e-5, rtol=1e-5)

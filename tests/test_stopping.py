@@ -1,0 +1,78 @@
+"""Stopping conditions: bound shapes, monotonicity, and (ε,δ) coverage
+(property-based)."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.frames import StateFrame
+from repro.core.stopping import (EmpiricalBernsteinCondition,
+                                 HoeffdingCondition, KadabraCondition,
+                                 kadabra_omega)
+
+
+def test_kadabra_bounds_nonnegative_and_decreasing():
+    cond = KadabraCondition(eps=0.05, delta=0.1, omega=10_000, n_vertices=50)
+    b = jnp.linspace(0.0, 1.0, 50)
+    f1, g1 = cond.per_vertex_bounds(b, jnp.float32(100.0))
+    f2, g2 = cond.per_vertex_bounds(b, jnp.float32(1000.0))
+    assert np.all(np.asarray(f1) >= 0) and np.all(np.asarray(g1) >= 0)
+    # both bounds shrink with more samples
+    assert np.all(np.asarray(f2) <= np.asarray(f1) + 1e-7)
+    assert np.all(np.asarray(g2) <= np.asarray(g1) + 1e-7)
+    # f,g grow with b̃ (paper App. B)
+    assert np.all(np.diff(np.asarray(f2)) >= -1e-7)
+    assert np.all(np.diff(np.asarray(g2)) >= -1e-7)
+
+
+def test_kadabra_stops_at_omega():
+    cond = KadabraCondition(eps=0.001, delta=0.1, omega=500, n_vertices=10)
+    frame = StateFrame(num=jnp.int32(500), data=jnp.ones((10,), jnp.int32) * 250)
+    stop, aux = cond(frame)
+    assert bool(stop)
+
+
+def test_omega_formula():
+    w = kadabra_omega(0.05, 0.1, vd_upper=20)
+    assert 1_000 < w < 3_000  # (0.5/0.0025)·(4+1+2.30) ≈ 1461
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.3), st.floats(0.05, 0.3))
+def test_hoeffding_threshold(eps, delta):
+    cond = HoeffdingCondition(eps=eps, delta=delta)
+    need = np.log(2.0 / delta) / (2 * eps * eps)
+    below = StateFrame(num=jnp.int32(int(need * 0.9)),
+                       data=jnp.zeros((), jnp.float32))
+    above = StateFrame(num=jnp.int32(int(need * 1.1) + 2),
+                       data=jnp.zeros((), jnp.float32))
+    assert not bool(cond(below)[0])
+    assert bool(cond(above)[0])
+
+
+def test_empirical_bernstein_coverage():
+    """(ε,δ)-coverage on Bernoulli streams: the stopped estimate must be
+    within ε of the true mean in ≥ (1−δ) of trials."""
+    rng = np.random.default_rng(0)
+    eps, delta, p = 0.05, 0.1, 0.3
+    cond = EmpiricalBernsteinCondition(eps=eps, delta=delta, value_range=1.0)
+    failures = 0
+    trials = 40
+    for t in range(trials):
+        s1 = s2 = 0.0
+        n = 0
+        while True:
+            x = float(rng.random() < p)
+            s1 += x
+            s2 += x * x
+            n += 1
+            frame = StateFrame(num=jnp.int32(n),
+                               data={"s1": jnp.float32(s1),
+                                     "s2": jnp.float32(s2)})
+            stop, aux = cond(frame)
+            if bool(stop) or n > 20_000:
+                break
+        if abs(s1 / n - p) > eps:
+            failures += 1
+    assert failures / trials <= delta + 0.05, f"{failures}/{trials} misses"
