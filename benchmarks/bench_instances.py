@@ -1,0 +1,46 @@
+"""ADS instance-layer sweep: wall seconds for every registered workload ×
+strategy × world — the multi-workload generalization of the Tables 2–3
+KADABRA-only sweep (tables23_instances.py).
+
+    PYTHONPATH=src python -m benchmarks.run --only bench_instances
+    PYTHONPATH=src python -m benchmarks.bench_instances [--bench-scale]
+
+CSV: instances/<workload>/<strategy>/W=<w>, us_per_call, tau=<samples>
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, timeit
+from repro.core.frames import FrameStrategy
+from repro.core.instances import available_instances, run_instance
+
+STRATS = (FrameStrategy.BARRIER, FrameStrategy.LOCAL_FRAME,
+          FrameStrategy.SHARED_FRAME, FrameStrategy.INDEXED_FRAME)
+
+
+def run(bench_scale: bool = False) -> None:
+    if bench_scale:
+        from repro.configs.adaptive_instances import BENCH
+        workloads = list(BENCH.values())
+    else:
+        workloads = list(available_instances())
+    for wl in workloads:
+        name = wl if isinstance(wl, str) else wl.name
+        for strat in STRATS:
+            for world in (1, 4):
+                tau = {}
+
+                def once(w=wl, s=strat, ww=world):
+                    est, res, _ = run_instance(w, strategy=s, world=ww)
+                    tau["v"] = res.num
+                    return est
+
+                t = timeit(once, warmup=1, iters=2)
+                emit(f"instances/{name}/{strat.value}/W={world}", t,
+                     f"tau={tau['v']}")
+
+
+if __name__ == "__main__":
+    run(bench_scale="--bench-scale" in sys.argv[1:])

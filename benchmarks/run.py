@@ -11,6 +11,7 @@ Emits ``name,us_per_call,derived`` CSV rows (plus ``#`` commentary lines).
 | fig3a_speedup        | Fig. 3a — epoch-based vs barrier (meas. + model) |
 | fig3b_fsweep         | Fig. 3b — shared-frame F sweep                   |
 | tables23_instances   | Tables 2–3 — per-instance absolute times         |
+| bench_instances      | ADS registry sweep — workload × strategy × W     |
 | roofline_table       | §Roofline — 40-cell dry-run aggregate            |
 | bench_adaptive       | §3.1 (ours) — adaptive grad-accum savings        |
 """
@@ -31,6 +32,7 @@ MODULES = [
     "fig3a_speedup",
     "fig3b_fsweep",
     "tables23_instances",
+    "bench_instances",
     "roofline_table",
     "bench_adaptive",
 ]

@@ -1,0 +1,34 @@
+"""Presets for the ADS instance layer (``repro.core.instances``).
+
+Mirrors ``configs/kadabra_bc.py`` for the two new workloads: each preset is
+a frozen instance object ready for ``register_instance`` (or direct
+``build()``), sized either for CI-speed conformance runs (the registry
+defaults) or for benchmark-scale measurements.
+"""
+
+from __future__ import annotations
+
+from repro.core.instances import (KadabraInstance, ReachabilityInstance,
+                                  TrianglesInstance)
+
+# Conformance-sized (the registry defaults — tiny, exact oracles feasible).
+CONFORMANCE = {
+    "kadabra": KadabraInstance(),
+    "triangles": TrianglesInstance(),
+    "reachability": ReachabilityInstance(),
+}
+
+# Benchmark-sized: big enough that strategy differences show up in wall
+# time, still CPU-tractable.  Exact oracles are NOT computed at this scale;
+# the conformance harness is the correctness gate, these are for timing.
+BENCH = {
+    "kadabra-m": KadabraInstance(name="kadabra-m", n_vertices=512,
+                                 n_edges=2048, eps=0.05, batch=64,
+                                 compute_oracle=False),
+    "triangles-m": TrianglesInstance(name="triangles-m", n_vertices=2048,
+                                     m_per=4, eps_p=0.02, batch=256,
+                                     compute_oracle=False),
+    "reachability-m": ReachabilityInstance(name="reachability-m", rows=4,
+                                           cols=4, t=15, eps=0.02,
+                                           batch=256, compute_oracle=False),
+}

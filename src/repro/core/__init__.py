@@ -1,3 +1,18 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's core system: state frames, the epoch engine, stopping rules,
+the multi-workload ADS instance layer, and the cross-strategy conformance
+harness."""
+
+from .adaptive import AdaptiveResult, run_adaptive
+from .frames import (Collectives, FrameStrategy, StateFrame, accumulate,
+                     axis_collectives, combine, sequential_collectives,
+                     shard_frame_pad, zeros_like_frame)
+from .instances import (AdaptiveInstance, BuiltInstance, available_instances,
+                        get_instance, register_instance, run_instance)
+
+__all__ = [
+    "AdaptiveInstance", "AdaptiveResult", "BuiltInstance", "Collectives",
+    "FrameStrategy", "StateFrame", "accumulate", "available_instances",
+    "axis_collectives", "combine", "get_instance", "register_instance",
+    "run_adaptive", "run_instance", "sequential_collectives",
+    "shard_frame_pad", "zeros_like_frame",
+]

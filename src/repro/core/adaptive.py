@@ -33,7 +33,8 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveResult:
-    data: np.ndarray        # consistent accumulated data (full, unsharded)
+    data: PyTree            # consistent accumulated data (full, unsharded)
+                            # — numpy leaves, same treedef as the template
     num: int                # τ — samples in the checked state
     stopped: bool
     epochs: int
@@ -50,13 +51,15 @@ def run_adaptive(sample_fn, check_fn, template: PyTree, *,
                  mesh=None, mesh_axis: Optional[str] = None,
                  frame_shards: int = 0) -> AdaptiveResult:
     strat = FrameStrategy(strategy) if isinstance(strategy, str) else strategy
+    if mesh is not None and mesh_axis is not None:
+        world = mesh.shape[mesh_axis]  # outputs are stacked per worker
     rounds = rounds_for_world(rounds_per_epoch * round_batch, round_batch,
                               world, xi) if xi else rounds_per_epoch
     cfg = EpochConfig(strategy=strat, rounds_per_epoch=rounds,
                       max_epochs=max_epochs, xi=xi)
     if mesh is not None and mesh_axis is not None:
         st = run_sharded(sample_fn, check_fn, template, init_carry, seed,
-                         mesh, mesh_axis, cfg)
+                         mesh, mesh_axis, cfg, frame_shards=frame_shards)
     elif world == 1:
         st = run_worker(sample_fn, check_fn, template, init_carry,
                         jax.random.key(seed), cfg,
@@ -67,15 +70,29 @@ def run_adaptive(sample_fn, check_fn, template: PyTree, *,
         st = run_virtual(sample_fn, check_fn, template, init_carry, seed,
                          world, cfg, frame_shards=frame_shards)
 
+    # run_virtual/run_sharded stack outputs per worker (even for W=1 meshes);
+    # only the W=1 run_worker path returns unstacked leaves.
+    stacked = (mesh is not None and mesh_axis is not None) or world > 1
+
     def first(x):
         a = np.asarray(x)
-        return a[0] if (world > 1 and a.ndim >= 1 and a.shape[0] == world) \
+        return a[0] if (stacked and a.ndim >= 1 and a.shape[0] == world) \
             else a
 
-    if strat == FrameStrategy.SHARED_FRAME and world > 1:
-        data = np.asarray(st.total.data).reshape(-1)
+    if strat == FrameStrategy.SHARED_FRAME and stacked:
+        # Reassemble the reduce-scattered total: worker i holds shard i of
+        # ⊕ Δ (with F < W, group 0 — workers 0..F−1 — holds one full copy).
+        F = frame_shards or world
+
+        def reassemble(x):
+            a = np.asarray(x)
+            if a.ndim <= 1:  # per-worker scalar leaf — fully reduced
+                return a[0] if a.ndim == 1 else a
+            return a[:F].reshape(F * a.shape[1], *a.shape[2:])
+
+        data = jax.tree.map(reassemble, st.total.data)
     else:
-        data = np.asarray(jax.tree.map(first, st.total.data))
+        data = jax.tree.map(first, st.total.data)
     return AdaptiveResult(
         data=data, num=int(first(st.total.num)),
         stopped=bool(first(st.stop)), epochs=int(first(st.epoch)),

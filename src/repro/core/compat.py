@@ -1,0 +1,88 @@
+"""JAX version-compatibility resolvers.
+
+The codebase targets the modern JAX surface (``jax.shard_map``,
+``jax.lax.axis_size``, ``jax.sharding.AxisType``); older installs (≤ 0.4.x)
+ship the same functionality under different names.  Everything that touches a
+version-sensitive API goes through this module so the rest of the code reads
+as if it were written against one JAX.
+
+Resolved here:
+
+* :func:`shard_map` — ``jax.shard_map`` (new) or
+  ``jax.experimental.shard_map.shard_map`` (old); the new ``check_vma``
+  kwarg maps onto the old ``check_rep``.
+* :func:`axis_size` — ``jax.lax.axis_size`` or a ``psum(1)`` fallback
+  (identical value inside vmap/shard_map; traced instead of static, which
+  every call site tolerates).
+* :func:`make_mesh` — forwards ``axis_types`` only where supported (older
+  meshes are implicitly fully ``Auto``, so dropping the kwarg is lossless
+  for our usage).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm, "check_vma"
+    from jax.experimental.shard_map import shard_map as sm  # JAX ≤ 0.4.x
+    return sm, "check_rep"
+
+
+_SHARD_MAP, _CHECK_KWARG = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on any JAX version (``check_vma``≡old ``check_rep``)."""
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KWARG: check_vma})
+
+
+def axis_size(axis_name: Any) -> jax.Array:
+    """Size of a mapped axis; works on JAX without ``jax.lax.axis_size``."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on any JAX version (older
+    releases return a one-element list of per-program dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` (new) → ``jax.sharding.use_mesh`` (transitional) →
+    ``with mesh:`` (the Mesh context manager, JAX ≤ 0.4.x).
+    """
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
+
+
+def make_mesh(shape, axes, *, auto_axis_types: bool = True):
+    """``jax.make_mesh`` forwarding ``axis_types`` only when supported."""
+    try:
+        from jax.sharding import AxisType  # JAX ≥ 0.5
+    except ImportError:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    if not auto_axis_types:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(tuple(axes)))

@@ -318,7 +318,7 @@ def run_virtual(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
 
 def run_sharded(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
                 init_carry: PyTree, seed: int, mesh, axis: str,
-                cfg: EpochConfig) -> EpochState:
+                cfg: EpochConfig, frame_shards: int = 0) -> EpochState:
     """Run the engine over a real mesh axis with shard_map (production path).
 
     Every leaf of ``init_carry``/``template`` is treated as replicated;
@@ -328,10 +328,11 @@ def run_sharded(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
     like ``total``/``stop`` repeat identically — callers index ``[0]``).
     """
     from jax.sharding import PartitionSpec as P
+    from .compat import shard_map
     from .frames import axis_collectives
 
     world = mesh.shape[axis]
-    colls = axis_collectives(axis, world)
+    colls = axis_collectives(axis, world, frame_shards=frame_shards)
 
     def per_worker(keys, wids):
         st = run_worker(sample_fn, check_fn, template, init_carry,
@@ -343,8 +344,8 @@ def run_sharded(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
 
     keys = jax.random.split(jax.random.key(seed), world)
     wids = jnp.arange(world, dtype=jnp.int32)
-    fn = jax.shard_map(per_worker, mesh=mesh,
-                       in_specs=(P(axis), P(axis)),
-                       out_specs=P(axis),
-                       check_vma=False)
+    fn = shard_map(per_worker, mesh=mesh,
+                   in_specs=(P(axis), P(axis)),
+                   out_specs=P(axis),
+                   check_vma=False)
     return fn(keys, wids)

@@ -1,0 +1,313 @@
+"""ADS instance layer — workloads as first-class, registered objects.
+
+The paper's framework (Algorithm 1/2) is generic over *any* adaptive
+sampling algorithm; the epoch engine in :mod:`repro.core.epoch` already is.
+This module makes that genericity concrete: an :class:`AdaptiveInstance`
+bundles everything the engine plus the test/benchmark harnesses need about
+one workload —
+
+    SAMPLE()        sample_fn   (key, carry) -> (StateFrame delta, carry)
+    CHECKFORSTOP()  check_fn    (StateFrame total) -> (stop, aux)
+    frame shape     template    (padded for SHARED_FRAME sharding)
+    ground truth    oracle      exact reference value of the estimand
+    extraction      estimate    reduced frame data -> estimate vector
+
+and a **registry** maps workload names to instances, so strategy sweeps,
+the conformance harness (:mod:`repro.core.conformance`) and benchmarks can
+iterate ``for name in available_instances()`` instead of hard-coding
+KADABRA.
+
+Registered out of the box:
+
+* ``kadabra``       — betweenness centrality (the paper's case study)
+* ``triangles``     — triangle counting via wedge sampling
+* ``reachability``  — s–t reachability under edge percolation
+
+Adding a workload = implement ``build()`` returning a
+:class:`BuiltInstance` + ``register_instance(...)`` (see README §Instance
+layer).  Graph modules are imported lazily inside ``build`` so importing
+this module stays cheap and cycle-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import numpy as np
+
+from .adaptive import AdaptiveResult, run_adaptive
+from .frames import FrameStrategy, shard_frame_pad
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltInstance:
+    """One workload, fully materialized for a given (world, strategy).
+
+    ``true_len`` is the unpadded leading length of vector frame leaves;
+    :meth:`trim` strips SHARED_FRAME padding so estimates and cross-strategy
+    comparisons always happen on canonical (unpadded) data.
+    """
+
+    name: str
+    sample_fn: Callable
+    check_fn: Callable
+    template: PyTree
+    init_carry: PyTree
+    samples_per_round: int        # frame.num contribution of one sample_fn call
+    true_len: int
+    eps: float                    # tolerance in estimate units
+    delta: float
+    oracle: np.ndarray            # exact value of the estimand (flat vector)
+    estimate: Callable[[PyTree, float], np.ndarray]  # (trimmed data, τ) -> vec
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+
+    def trim(self, data: PyTree) -> PyTree:
+        def t(x):
+            a = np.asarray(x)
+            return a[: self.true_len] if a.ndim >= 1 else a
+        return jax.tree.map(t, data)
+
+
+@runtime_checkable
+class AdaptiveInstance(Protocol):
+    """A registrable ADS workload: a name plus a ``build`` factory."""
+
+    name: str
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance: ...
+
+
+_REGISTRY: Dict[str, AdaptiveInstance] = {}
+
+
+def register_instance(instance: AdaptiveInstance, *,
+                      overwrite: bool = False) -> AdaptiveInstance:
+    if not overwrite and instance.name in _REGISTRY:
+        raise ValueError(f"instance {instance.name!r} already registered")
+    _REGISTRY[instance.name] = instance
+    return instance
+
+
+def get_instance(name: str) -> AdaptiveInstance:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown instance {name!r}; "
+                       f"available: {available_instances()}") from None
+
+
+def available_instances() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def run_instance(instance: "str | AdaptiveInstance", *,
+                 strategy: "str | FrameStrategy" = FrameStrategy.LOCAL_FRAME,
+                 world: int = 1, seed: int = 0,
+                 ) -> Tuple[np.ndarray, AdaptiveResult, BuiltInstance]:
+    """Build + run one registered workload; returns (estimate, result, built)."""
+    inst = get_instance(instance) if isinstance(instance, str) else instance
+    strat = FrameStrategy(strategy) if isinstance(strategy, str) else strategy
+    built = inst.build(world=world, strategy=strat)
+    res = run_adaptive(built.sample_fn, built.check_fn, built.template,
+                       strategy=strat, world=world, seed=seed,
+                       rounds_per_epoch=built.rounds_per_epoch,
+                       max_epochs=built.max_epochs,
+                       init_carry=built.init_carry)
+    est = built.estimate(built.trim(res.data), float(res.num))
+    return est, res, built
+
+
+# ---------------------------------------------------------------------------
+# Built-in instances.  Graph construction / preprocessing / exact oracles are
+# memoized per instance (they are pure functions of the frozen params).
+# ---------------------------------------------------------------------------
+
+_CACHE: Dict[Any, Any] = {}
+
+
+def _cached(key, fn):
+    if key not in _CACHE:
+        _CACHE[key] = fn()
+    return _CACHE[key]
+
+
+def _pad_for(n: int, world: int, strategy: FrameStrategy) -> int:
+    return shard_frame_pad(n, world) if strategy == FrameStrategy.SHARED_FRAME \
+        else n
+
+
+@dataclasses.dataclass(frozen=True)
+class KadabraInstance:
+    """Betweenness-centrality approximation (the paper's case study)."""
+
+    name: str = "kadabra"
+    n_vertices: int = 32
+    n_edges: int = 96
+    graph_seed: int = 1
+    eps: float = 0.1
+    delta: float = 0.1
+    batch: int = 32
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+    # Exact oracles are for conformance-sized graphs; benchmark presets
+    # disable them (oracle = NaN; don't run conformance on those).
+    compute_oracle: bool = True
+
+    def _graph(self):
+        def make():
+            from ..graphs import brandes_exact, erdos_renyi
+            from ..graphs.kadabra import preprocess
+            g = erdos_renyi(self.n_vertices, self.n_edges, seed=self.graph_seed)
+            pre = preprocess(g, self.eps, self.delta)
+            oracle = brandes_exact(g) if self.compute_oracle \
+                else np.full((g.n,), np.nan)
+            return g, pre, oracle
+        return _cached(("kadabra", self), make)
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance:
+        from ..core.stopping import KadabraCondition
+        from ..graphs.kadabra import frame_template, make_sample_fn
+        g, pre, oracle = self._graph()
+        pad = _pad_for(g.n, world, strategy)
+        sample_fn = make_sample_fn(g, pre, self.batch, pad_to=pad)
+        cond = KadabraCondition(eps=self.eps, delta=self.delta,
+                                omega=pre.omega, n_vertices=g.n)
+
+        def estimate(data: PyTree, num: float) -> np.ndarray:
+            return np.asarray(data, np.float64) / max(num, 1.0)
+
+        return BuiltInstance(
+            name=self.name, sample_fn=sample_fn, check_fn=cond,
+            template=frame_template(g, pad), init_carry=None,
+            samples_per_round=self.batch, true_len=g.n,
+            eps=self.eps, delta=self.delta, oracle=oracle,
+            estimate=estimate, rounds_per_epoch=self.rounds_per_epoch,
+            max_epochs=self.max_epochs)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrianglesInstance:
+    """Triangle counting via wedge sampling (estimate in count units)."""
+
+    name: str = "triangles"
+    n_vertices: int = 40
+    m_per: int = 3
+    graph_seed: int = 2
+    eps_p: float = 0.05           # Hoeffding tolerance on the closure prob
+    delta: float = 0.1
+    batch: int = 64
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+    # triangles_exact is dense O(n³) — benchmark presets disable it.
+    compute_oracle: bool = True
+
+    def _graph(self):
+        def make():
+            from ..graphs import barabasi_albert
+            from ..graphs.triangles import triangles_exact, wedge_weights
+            g = barabasi_albert(self.n_vertices, self.m_per,
+                                seed=self.graph_seed)
+            _, w_total = wedge_weights(g)
+            t_exact = triangles_exact(g) if self.compute_oracle \
+                else float("nan")
+            return g, w_total, t_exact
+        return _cached(("triangles", self), make)
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance:
+        import jax.numpy as jnp
+
+        from ..core.stopping import WedgeClosureCondition
+        from ..graphs.triangles import make_wedge_sample_fn, triangle_estimate
+        g, w_total, t_exact = self._graph()
+        pad = _pad_for(g.n, world, strategy)
+        sample_fn = make_wedge_sample_fn(g, self.batch, pad_to=pad)
+        cond = WedgeClosureCondition(eps=self.eps_p, delta=self.delta,
+                                     total_wedges=w_total)
+        eps_count = self.eps_p * w_total / 3.0
+
+        def estimate(data: PyTree, num: float) -> np.ndarray:
+            return np.asarray([triangle_estimate(data, num, w_total)])
+
+        return BuiltInstance(
+            name=self.name, sample_fn=sample_fn, check_fn=cond,
+            template=jnp.zeros((pad,), jnp.int32), init_carry=None,
+            samples_per_round=self.batch, true_len=g.n,
+            eps=eps_count, delta=self.delta,
+            oracle=np.asarray([t_exact]), estimate=estimate,
+            rounds_per_epoch=self.rounds_per_epoch,
+            max_epochs=self.max_epochs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReachabilityInstance:
+    """s–t reachability probability under edge percolation (tiny graph so
+    the exact-enumeration oracle stays feasible)."""
+
+    name: str = "reachability"
+    rows: int = 3
+    cols: int = 3
+    s: int = 0
+    t: int = 8
+    pi: float = 0.7               # per-edge survival probability
+    eps: float = 0.05
+    delta: float = 0.1
+    batch: int = 64
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+    # Exact enumeration is 2^m — infeasible beyond ~20 edges.  Benchmark
+    # presets disable it (oracle = NaN; don't run conformance on those).
+    compute_oracle: bool = True
+
+    def _graph(self):
+        def make():
+            from ..graphs import grid2d
+            from ..graphs.reachability import reachability_exact
+            g = grid2d(self.rows, self.cols)
+            p_exact = reachability_exact(g, self.s, self.t, self.pi) \
+                if self.compute_oracle else float("nan")
+            return g, p_exact
+        return _cached(("reachability", self), make)
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance:
+        from ..core.stopping import PercolationCondition, hoeffding_tau_needed
+        from ..graphs.reachability import (frame_template,
+                                           make_percolation_sample_fn)
+        g, p_exact = self._graph()
+        pad = _pad_for(g.n, world, strategy)
+        sample_fn = make_percolation_sample_fn(g, self.s, self.t, self.pi,
+                                               self.batch, pad_to=pad)
+        # ω analog: the static Hoeffding bound caps the sample count
+        omega = int(np.ceil(float(hoeffding_tau_needed(self.eps,
+                                                       self.delta))))
+        cond = PercolationCondition(eps=self.eps, delta=self.delta,
+                                    max_samples=omega)
+
+        def estimate(data: PyTree, num: float) -> np.ndarray:
+            return np.asarray([float(data["s1"]) / max(num, 1.0)])
+
+        return BuiltInstance(
+            name=self.name, sample_fn=sample_fn, check_fn=cond,
+            template=frame_template(g, pad), init_carry=None,
+            samples_per_round=self.batch, true_len=g.n,
+            eps=self.eps, delta=self.delta,
+            oracle=np.asarray([p_exact]), estimate=estimate,
+            rounds_per_epoch=self.rounds_per_epoch,
+            max_epochs=self.max_epochs)
+
+
+register_instance(KadabraInstance())
+register_instance(TrianglesInstance())
+register_instance(ReachabilityInstance())

@@ -35,6 +35,28 @@ def _log_safe(x):
     return jnp.log(jnp.maximum(x, 1e-30))
 
 
+def hoeffding_tau_needed(eps: float, delta: float,
+                         value_range: float = 1.0) -> jax.Array:
+    """Hoeffding (ε,δ) sample bound: τ ≥ (range²/(2ε²))·log(2/δ)."""
+    return (value_range ** 2) / (2.0 * eps ** 2) * jnp.log(
+        jnp.float32(2.0 / delta))
+
+
+def empirical_bernstein_half_width(s1: jax.Array, s2: jax.Array,
+                                   tau: jax.Array, delta: float,
+                                   value_range: float = 1.0):
+    """Maurer–Pontil EB half-width from the running moments Σx, Σx².
+
+    Returns (mean, half_width) with
+    half = sqrt(2 V̂ log(3/δ)/τ) + 3 R log(3/δ)/τ.
+    """
+    mean = s1 / tau
+    var = jnp.maximum(s2 / tau - mean ** 2, 0.0)
+    log3d = jnp.log(jnp.float32(3.0 / delta))
+    half = jnp.sqrt(2.0 * var * log3d / tau) + 3.0 * value_range * log3d / tau
+    return mean, half
+
+
 @dataclasses.dataclass(frozen=True)
 class KadabraCondition:
     """KADABRA stopping condition (paper App. B).
@@ -100,7 +122,7 @@ class HoeffdingCondition:
 
     def __call__(self, frame: StateFrame):
         tau = frame.num.astype(jnp.float32)
-        need = (self.value_range ** 2) / (2.0 * self.eps ** 2) * jnp.log(2.0 / self.delta)
+        need = hoeffding_tau_needed(self.eps, self.delta, self.value_range)
         mean = jax.tree.map(
             lambda s: s.astype(jnp.float32) / jnp.maximum(tau, 1.0), frame.data)
         return tau >= need, {"mean": mean, "tau": tau, "tau_needed": need}
@@ -120,14 +142,74 @@ class EmpiricalBernsteinCondition:
 
     def __call__(self, frame: StateFrame):
         tau = jnp.maximum(frame.num.astype(jnp.float32), 2.0)
-        s1 = frame.data["s1"].astype(jnp.float32)
-        s2 = frame.data["s2"].astype(jnp.float32)
-        mean = s1 / tau
-        var = jnp.maximum(s2 / tau - mean ** 2, 0.0)
-        log3d = jnp.log(3.0 / self.delta)
-        half = jnp.sqrt(2.0 * var * log3d / tau) + 3.0 * self.value_range * log3d / tau
+        mean, half = empirical_bernstein_half_width(
+            frame.data["s1"].astype(jnp.float32),
+            frame.data["s2"].astype(jnp.float32),
+            tau, self.delta, self.value_range)
         stop = jnp.logical_and(frame.num >= 2, jnp.max(half) <= self.eps)
         return stop, {"mean": mean, "half_width": half, "tau": frame.num}
+
+
+@dataclasses.dataclass(frozen=True)
+class WedgeClosureCondition:
+    """Stopping rule for triangle counting via wedge sampling.
+
+    Each sample closes (x=1) or doesn't (x=0) a uniformly random wedge, so
+    the closure probability p = 3T/W (T triangles, W wedges) is a bounded
+    mean and the Hoeffding bound applies: stop once
+
+        τ ≥ (1/(2ε²))·log(2/δ)
+
+    which guarantees |p̂ − p| ≤ ε w.p. ≥ 1−δ, i.e. a triangle-count error of
+    at most ε·W/3.  The verdict depends only on ``frame.num`` (fully reduced
+    under every strategy, including SHARED_FRAME shards), so this condition
+    is shard-safe by construction.
+    """
+
+    eps: float                # absolute error on the closure probability p
+    delta: float
+    total_wedges: float = 1.0  # W — for the count-scale tolerance in aux
+
+    def __call__(self, frame: StateFrame):
+        tau = frame.num.astype(jnp.float32)
+        need = hoeffding_tau_needed(self.eps, self.delta)
+        stop = tau >= need
+        aux = {"tau": tau, "tau_needed": need,
+               "eps_count": jnp.float32(self.eps * self.total_wedges / 3.0)}
+        return stop, aux
+
+
+@dataclasses.dataclass(frozen=True)
+class PercolationCondition:
+    """Stopping rule for Monte-Carlo s–t reachability (percolation).
+
+    Empirical-Bernstein (Maurer & Pontil) on the reachability indicator
+    x ∈ {0,1}: stop when the data-dependent half-width
+
+        sqrt(2·V̂·log(3/δ)/τ) + 3·log(3/δ)/τ  ≤  ε
+
+    For p near 0 or 1 the variance term vanishes and EB stops much earlier
+    than Hoeffding — the adaptive win this instance exists to exercise.  A
+    static cap ``max_samples`` (the ω analog: the Hoeffding sample bound)
+    guarantees termination.  Only the scalar moments ``s1``/``s2`` and ``num``
+    enter the verdict; extra frame leaves (e.g. per-vertex hit counts) are
+    carried but ignored, and all of these are fully reduced under
+    SHARED_FRAME, so the condition is shard-safe.
+    """
+
+    eps: float
+    delta: float
+    max_samples: int = 1 << 20
+
+    def __call__(self, frame: StateFrame):
+        tau = jnp.maximum(frame.num.astype(jnp.float32), 2.0)
+        mean, half = empirical_bernstein_half_width(
+            frame.data["s1"].astype(jnp.float32),
+            frame.data["s2"].astype(jnp.float32),
+            tau, self.delta)
+        eb_ok = jnp.logical_and(frame.num >= 2, half <= self.eps)
+        stop = jnp.logical_or(eb_ok, frame.num >= self.max_samples)
+        return stop, {"p_hat": mean, "half_width": half, "tau": frame.num}
 
 
 @dataclasses.dataclass(frozen=True)

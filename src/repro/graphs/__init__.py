@@ -10,10 +10,17 @@ from .bfs import bfs_sssp, connected_components, eccentricity, sample_path
 from .brandes import brandes_exact
 from .kadabra import (KadabraParams, frame_template, make_sample_fn,
                       preprocess, run_kadabra)
+from .reachability import (make_percolation_sample_fn, reachability_exact,
+                           reached_masked)
+from .triangles import (make_wedge_sample_fn, triangle_estimate,
+                        triangles_exact, wedge_weights)
 
 __all__ = [
     "Graph", "from_edges", "erdos_renyi", "barabasi_albert", "grid2d",
     "bfs_sssp", "connected_components", "eccentricity", "sample_path",
     "brandes_exact", "KadabraParams", "preprocess", "make_sample_fn",
     "run_kadabra", "frame_template",
+    "make_wedge_sample_fn", "triangles_exact", "triangle_estimate",
+    "wedge_weights",
+    "make_percolation_sample_fn", "reachability_exact", "reached_masked",
 ]

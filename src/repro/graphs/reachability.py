@@ -1,0 +1,140 @@
+"""Monte-Carlo s–t reachability under edge percolation — a third ADS
+workload on the epoch engine.
+
+Each undirected edge survives independently with probability π; one sample
+draws a percolated subgraph and reports whether ``t`` is reachable from
+``s`` (a level-synchronous masked frontier expansion, the BFS machinery of
+:mod:`repro.graphs.bfs` without σ counting).  The reachability probability
+p = Pr[s ⇝ t] is the two-terminal network-reliability measure; computing it
+exactly is #P-hard, which is precisely why the adaptive Monte-Carlo
+estimator (with an empirical-Bernstein stopping rule that exploits the
+vanishing variance near p ∈ {0, 1}) is the method of choice.
+
+Frame layout:
+
+    frame.num  — number of percolation samples
+    frame.data — {"s1": Σx, "s2": Σx²  (scalars, fully reduced under every
+                  strategy), "hits": (n_pad,) int32 per-vertex reached
+                  counts (a vector leaf so SHARED_FRAME exercises a real
+                  reduce-scatter)}
+
+Stopping rule: :class:`~repro.core.stopping.PercolationCondition`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.frames import StateFrame
+from .csr import Graph
+
+
+def arc_edge_ids(g: Graph) -> Tuple[np.ndarray, int]:
+    """Map each directed arc to its undirected edge id.
+
+    Returns ``(ids (m_arcs,) int32, m_edges)``; the two arcs of an edge share
+    one id, so one Bernoulli draw per edge percolates both directions.
+    """
+    src = np.asarray(g.src).astype(np.int64)
+    dst = np.asarray(g.dst).astype(np.int64)
+    key = np.minimum(src, dst) * g.n + np.maximum(src, dst)
+    uniq, inv = np.unique(key, return_inverse=True)
+    return inv.astype(np.int32), int(uniq.size)
+
+
+def reached_masked(g: Graph, arc_ids: jax.Array, edge_alive: jax.Array,
+                   s: jax.Array) -> jax.Array:
+    """(n,) bool — vertices reachable from ``s`` using surviving edges."""
+    n = g.n
+    alive = edge_alive[arc_ids]
+    reached0 = jnp.zeros((n,), bool).at[s].set(True)
+
+    def cond(st):
+        _, changed, it = st
+        return jnp.logical_and(changed, it < n)
+
+    def body(st):
+        r, _, it = st
+        contrib = jnp.logical_and(r[g.src], alive).astype(jnp.int32)
+        agg = jax.ops.segment_sum(contrib, g.dst, num_segments=n) > 0
+        new = jnp.logical_or(r, agg)
+        return new, jnp.any(new != r), it + 1
+
+    r, _, _ = jax.lax.while_loop(
+        cond, body, (reached0, jnp.bool_(True), jnp.int32(0)))
+    return r
+
+
+def make_percolation_sample_fn(g: Graph, s: int, t: int, pi: float,
+                               batch: int, *, pad_to: Optional[int] = None):
+    """Build SAMPLE() — one vectorized round of ``batch`` percolations."""
+    n = g.n
+    n_pad = pad_to or n
+    ids_np, m_edges = arc_edge_ids(g)
+    arc_ids = jnp.asarray(ids_np)
+    s_, t_ = jnp.int32(s), jnp.int32(t)
+
+    def one(key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        edge_alive = jax.random.uniform(key, (m_edges,)) < pi
+        r = reached_masked(g, arc_ids, edge_alive, s_)
+        return r[t_], r
+
+    def sample_fn(key: jax.Array, carry):
+        keys = jax.random.split(key, batch)
+        x, r = jax.vmap(one)(keys)
+        x32 = x.astype(jnp.int32)
+        hits = jnp.pad(jnp.sum(r, axis=0, dtype=jnp.int32), (0, n_pad - n))
+        data = {"s1": jnp.sum(x32), "s2": jnp.sum(x32 * x32), "hits": hits}
+        return StateFrame(num=jnp.int32(batch), data=data), carry
+
+    return sample_fn
+
+
+def frame_template(g: Graph, pad_to: Optional[int] = None):
+    n_pad = pad_to or g.n
+    return {"s1": jnp.zeros((), jnp.int32), "s2": jnp.zeros((), jnp.int32),
+            "hits": jnp.zeros((n_pad,), jnp.int32)}
+
+
+def reachability_exact(g: Graph, s: int, t: int, pi: float,
+                       max_edges: int = 20) -> float:
+    """Exact Pr[s ⇝ t] by enumerating all 2^m edge subsets — test oracle.
+
+    Feasible only for tiny graphs (m ≤ ``max_edges``); uses union–find per
+    subset.
+    """
+    ids, m = arc_edge_ids(g)
+    assert m <= max_edges, f"{m} edges is too many for exact enumeration"
+    # one (u, v) pair per undirected edge
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    first_arc = np.zeros(m, dtype=np.int64)
+    seen = set()
+    for a, e in enumerate(ids):
+        if int(e) not in seen:
+            seen.add(int(e))
+            first_arc[e] = a
+    eu, ev = src[first_arc], dst[first_arc]
+
+    def find(parent, x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    prob = 0.0
+    for mask in range(1 << m):
+        parent = list(range(g.n))
+        k = 0
+        for e in range(m):
+            if mask >> e & 1:
+                k += 1
+                ru, rv = find(parent, int(eu[e])), find(parent, int(ev[e]))
+                parent[ru] = rv
+        if find(parent, s) == find(parent, t):
+            prob += (pi ** k) * ((1.0 - pi) ** (m - k))
+    return prob

@@ -36,7 +36,8 @@ RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryr
 
 def _cost_dict(compiled, chips: int) -> dict:
     from repro.analysis.hlo import collective_bytes
-    ca = compiled.cost_analysis() or {}
+    from repro.core.compat import cost_analysis
+    ca = cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -77,7 +78,8 @@ def _lower_compile(cfg, shape, mesh, verbose=True, flags=None):
     # the cache one-hot update into the donated buffer.
     donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    from repro.core.compat import set_mesh
+    with set_mesh(mesh):
         lowered = jax.jit(step, in_shardings=in_sh,
                           donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
@@ -87,7 +89,8 @@ def _lower_compile(cfg, shape, mesh, verbose=True, flags=None):
     if verbose:
         print(f"  lowered {t_lower:.1f}s, compiled {t_compile:.1f}s")
         print(f"  memory_analysis: {compiled.memory_analysis()}")
-        ca = compiled.cost_analysis() or {}
+        from repro.core.compat import cost_analysis
+        ca = cost_analysis(compiled)
         print(f"  cost_analysis: flops={ca.get('flops', 0):.4g} "
               f"bytes={ca.get('bytes accessed', 0):.4g}")
     return compiled, dict(t_lower=t_lower, t_compile=t_compile)

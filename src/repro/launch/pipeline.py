@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.compat import shard_map
+
 PyTree = Any
 
 
@@ -81,6 +83,6 @@ def pipeline_forward(layer_fn: Callable, stacked_params: PyTree,
 
     # stage s holds layers [s·L/S, (s+1)·L/S)
     in_specs = (jax.tree.map(lambda _: P(axis), stacked_params), P())
-    fn = jax.shard_map(stage_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(), check_vma=False)
+    fn = shard_map(stage_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(), check_vma=False)
     return fn(stacked_params, x_micro)

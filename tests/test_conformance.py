@@ -1,0 +1,123 @@
+"""Cross-strategy conformance: every registered ADS instance under every
+FrameStrategy × W ∈ {1, 2, 4} (the paper's invariants, per workload), plus
+property tests for the algebra INDEXED_FRAME determinism rests on."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.conformance import run_conformance
+from repro.core.frames import (FrameStrategy, StateFrame, accumulate,
+                               combine, zeros_like_frame)
+from repro.core.instances import available_instances
+
+INSTANCES = ("kadabra", "triangles", "reachability")
+WORLDS = (1, 2, 4)
+
+
+@functools.lru_cache(maxsize=None)
+def report(name):
+    """One engine sweep per instance, shared by all parametrized asserts."""
+    return run_conformance(name, worlds=WORLDS, seed=0)
+
+
+def test_builtin_instances_registered():
+    for name in INSTANCES:
+        assert name in available_instances()
+
+
+@pytest.mark.parametrize("world", WORLDS)
+@pytest.mark.parametrize("strategy", list(FrameStrategy),
+                         ids=lambda s: s.name)
+@pytest.mark.parametrize("instance", INSTANCES)
+def test_cell(instance, strategy, world):
+    """Termination + Prop.-1 sample-count consistency + (ε,δ) accuracy vs
+    both the exact oracle and the W=1 sequential run."""
+    rep = report(instance)
+    cell = next(c for c in rep.cells
+                if c.strategy == strategy and c.world == world)
+    assert cell.ok, "\n".join(cell.failures)
+
+
+@pytest.mark.parametrize("instance", INSTANCES)
+def test_cross_invariants(instance):
+    """INDEXED_FRAME bit-identity across W; SHARED_FRAME shard reassembly
+    equals the replicated LOCAL_FRAME total."""
+    rep = report(instance)
+    assert not rep.cross_failures, "\n".join(rep.cross_failures)
+
+
+@pytest.mark.parametrize("instance", INSTANCES)
+def test_indexed_frame_bit_identical_estimates(instance):
+    """§D.2 acceptance: the INDEXED_FRAME estimate (b̃ for KADABRA) is
+    bit-identical — not merely close — for W ∈ {1, 2, 4}."""
+    rep = report(instance)
+    ests = [c.estimate for c in rep.cells
+            if c.strategy == FrameStrategy.INDEXED_FRAME]
+    assert len(ests) == len(WORLDS)
+    for e in ests[1:]:
+        np.testing.assert_array_equal(e, ests[0])
+
+
+# ------------------------------------------------------------------ algebra
+# INDEXED_FRAME determinism rests on ∘ being associative and commutative:
+# per-worker deltas may be *produced* in any order, but the checker consumes
+# them by frame index, so any combine/accumulate order must yield the same
+# totals.  Property-checked over random frame batches and permutations.
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12), st.integers(0, 2 ** 31 - 1))
+def test_combine_accumulate_order_invariance(w, n, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 100, size=(w, n))
+    nums = rng.integers(1, 10, size=(w,))
+    stacked = StateFrame(num=jnp.asarray(nums, jnp.int32),
+                         data=jnp.asarray(data, jnp.int32))
+    total = accumulate(stacked)
+    perm = rng.permutation(w)
+    permuted = StateFrame(num=jnp.asarray(nums[perm], jnp.int32),
+                          data=jnp.asarray(data[perm], jnp.int32))
+    total_perm = accumulate(permuted)
+    assert int(total.num) == int(total_perm.num)
+    np.testing.assert_array_equal(np.asarray(total.data),
+                                  np.asarray(total_perm.data))
+    # left-fold in permuted arrival order == batched accumulate
+    fold = zeros_like_frame(jnp.zeros((n,), jnp.int32))
+    for i in perm:
+        fold = combine(fold, StateFrame(num=jnp.int32(int(nums[i])),
+                                        data=jnp.asarray(data[i], jnp.int32)))
+    assert int(fold.num) == int(total.num)
+    np.testing.assert_array_equal(np.asarray(fold.data),
+                                  np.asarray(total.data))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+def test_indexed_prefix_check_order_independent_of_arrival(w, n, seed):
+    """The INDEXED prefix walk (combine frame 0, check, combine frame 1, …)
+    gives the same stopping prefix no matter how the frames were combined
+    into intermediate accumulations beforehand."""
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 50, size=(w, n))
+    thresh = float(rng.integers(1, max(2, int(data.sum()))))
+
+    def prefix_stop(order_hint):
+        # the checker is *defined* on index order; order_hint only changes
+        # how we build each prefix total (pairwise vs left-fold).
+        total = zeros_like_frame(jnp.zeros((n,), jnp.int32))
+        for j in range(w):
+            f = StateFrame(num=jnp.int32(1), data=jnp.asarray(data[j],
+                                                              jnp.int32))
+            total = combine(f, total) if order_hint and j % 2 else \
+                combine(total, f)
+            if float(np.asarray(total.data).sum()) >= thresh:
+                return j, np.asarray(total.data).copy()
+        return w, np.asarray(total.data).copy()
+
+    ja, da = prefix_stop(False)
+    jb, db = prefix_stop(True)
+    assert ja == jb
+    np.testing.assert_array_equal(da, db)

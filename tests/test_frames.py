@@ -1,11 +1,10 @@
 """Frame semantics + the paper's associativity requirement (property-based)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.frames import (FrameStrategy, StateFrame, accumulate,
                                axis_collectives, combine, shard_frame_pad,

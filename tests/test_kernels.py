@@ -1,12 +1,11 @@
 """Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
 (interpret=True executes the Pallas body in python on CPU)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.bfs_frontier import bfs_frontier

@@ -1,10 +1,9 @@
 """Stopping conditions: bound shapes, monotonicity, and (ε,δ) coverage
 (property-based)."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.frames import StateFrame
 from repro.core.stopping import (EmpiricalBernsteinCondition,
