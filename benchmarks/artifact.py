@@ -1,0 +1,200 @@
+"""Machine-readable perf artifacts: ``BENCH_<suite>.json`` writer + validator.
+
+This is the repo's perf-trajectory format — what CI records, uploads, and
+regresses against (the Tables 2–3 speedup-vs-strategy reproduction needs
+structured numbers, not ad-hoc CSV).  The schema is hand-validated (no
+jsonschema dependency in the container):
+
+Envelope (one file per benchmark suite)::
+
+    {
+      "schema_version": 1,
+      "suite": "instances",            # BENCH_<suite>.json
+      "jax_version": "0.4.37",
+      "platform": "cpu",               # jax.default_backend()
+      "created_unix": 1753776000.0,
+      "scale": "conformance",          # or "bench" (--bench-scale)
+      "rows": [ <row>, ... ]           # non-empty
+    }
+
+Row (one measured cell)::
+
+    {
+      "workload": "kadabra",           # registered instance name
+      "strategy": "local",             # FrameStrategy value
+      "world": 4,                      # (virtual) worker count, ≥ 1
+      "us_per_call": 1234.5,           # median wall time, > 0
+      "tau": 4096,                     # final sample count, > 0
+      "speedup_vs_barrier": 1.8        # us(BARRIER @ same workload+W)/us;
+    }                                  # 1.0 on BARRIER rows; null if no
+                                       # BARRIER row exists for the cell
+
+Usage::
+
+    python -m benchmarks.artifact validate out/BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+_ENVELOPE_FIELDS = {
+    "schema_version": int,
+    "suite": str,
+    "jax_version": str,
+    "platform": str,
+    "created_unix": (int, float),
+    "scale": str,
+    "rows": list,
+}
+
+_ROW_FIELDS = {
+    "workload": str,
+    "strategy": str,
+    "world": int,
+    "us_per_call": (int, float),
+    "tau": int,
+    "speedup_vs_barrier": (int, float, type(None)),
+}
+
+_STRATEGIES = ("lock", "barrier", "local", "shared", "indexed")
+_SCALES = ("conformance", "bench")
+
+
+def validate_bench(doc: Dict[str, Any]) -> List[str]:
+    """Structural + semantic validation; returns a list of error strings."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"document is {type(doc).__name__}, expected object"]
+    for key, typ in _ENVELOPE_FIELDS.items():
+        if key not in doc:
+            errs.append(f"missing envelope field {key!r}")
+        elif not isinstance(doc[key], typ) or isinstance(doc[key], bool):
+            errs.append(f"envelope field {key!r} has type "
+                        f"{type(doc[key]).__name__}")
+    if errs:
+        return errs
+    if doc["schema_version"] != SCHEMA_VERSION:
+        errs.append(f"schema_version {doc['schema_version']} != "
+                    f"{SCHEMA_VERSION}")
+    if doc["scale"] not in _SCALES:
+        errs.append(f"scale {doc['scale']!r} not in {_SCALES}")
+    if not doc["rows"]:
+        errs.append("rows is empty")
+    barrier_us: Dict[tuple, float] = {}
+    for i, row in enumerate(doc["rows"]):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        for key, typ in _ROW_FIELDS.items():
+            if key not in row:
+                errs.append(f"{where}: missing field {key!r}")
+            elif not isinstance(row[key], typ) or isinstance(row[key], bool):
+                errs.append(f"{where}.{key}: type {type(row[key]).__name__}")
+        if any(e.startswith((where + ":", where + ".")) for e in errs):
+            continue
+        if row["strategy"] not in _STRATEGIES:
+            errs.append(f"{where}: strategy {row['strategy']!r} not in "
+                        f"{_STRATEGIES}")
+        if row["world"] < 1:
+            errs.append(f"{where}: world {row['world']} < 1")
+        if row["us_per_call"] <= 0:
+            errs.append(f"{where}: us_per_call {row['us_per_call']} <= 0")
+        if row["tau"] <= 0:
+            errs.append(f"{where}: tau {row['tau']} <= 0")
+        sp = row["speedup_vs_barrier"]
+        if sp is not None and sp <= 0:
+            errs.append(f"{where}: speedup_vs_barrier {sp} <= 0")
+        if row["strategy"] == "barrier":
+            barrier_us[(row["workload"], row["world"])] = row["us_per_call"]
+    # cells with a BARRIER baseline must carry a speedup (and vice versa)
+    for i, row in enumerate(doc["rows"]):
+        if not isinstance(row, dict) or "workload" not in row:
+            continue
+        has_base = (row.get("workload"), row.get("world")) in barrier_us
+        sp = row.get("speedup_vs_barrier")
+        if has_base and sp is None:
+            errs.append(f"rows[{i}]: BARRIER baseline exists but "
+                        f"speedup_vs_barrier is null")
+        if not has_base and sp is not None:
+            errs.append(f"rows[{i}]: speedup_vs_barrier set without a "
+                        f"BARRIER baseline row")
+    return errs
+
+
+def attach_speedups(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Fill ``speedup_vs_barrier`` from the BARRIER rows in ``rows``."""
+    base = {(r["workload"], r["world"]): r["us_per_call"]
+            for r in rows if r["strategy"] == "barrier"}
+    for r in rows:
+        us = base.get((r["workload"], r["world"]))
+        r["speedup_vs_barrier"] = None if us is None \
+            else round(us / r["us_per_call"], 4)
+    return rows
+
+
+def write_bench(suite: str, rows: Sequence[Dict[str, Any]], *,
+                out_dir: "str | Path" = "bench-artifacts",
+                scale: str = "conformance") -> Path:
+    """Validate and write ``BENCH_<suite>.json``; returns the path."""
+    import jax
+
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "suite": suite,
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "created_unix": time.time(),
+        "scale": scale,
+        "rows": list(rows),
+    }
+    errs = validate_bench(doc)
+    if errs:
+        raise ValueError("refusing to write invalid BENCH artifact:\n  "
+                         + "\n  ".join(errs))
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def load_bench(path: "str | Path") -> Dict[str, Any]:
+    """Load + validate one artifact; raises ValueError on schema errors."""
+    doc = json.loads(Path(path).read_text())
+    errs = validate_bench(doc)
+    if errs:
+        raise ValueError(f"{path}: invalid BENCH artifact:\n  "
+                         + "\n  ".join(errs))
+    return doc
+
+
+def _cli(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] != "validate" or len(argv) < 2:
+        print("usage: python -m benchmarks.artifact validate FILE...",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for name in argv[1:]:
+        try:
+            doc = load_bench(name)
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {name}: {e}", file=sys.stderr)
+            bad += 1
+        else:
+            print(f"ok   {name}: suite={doc['suite']} "
+                  f"rows={len(doc['rows'])} scale={doc['scale']} "
+                  f"jax={doc['jax_version']}/{doc['platform']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_cli())

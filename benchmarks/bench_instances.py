@@ -1,46 +1,87 @@
-"""ADS instance-layer sweep: wall seconds for every registered workload ×
+"""ADS instance-layer sweep: wall time for every registered workload ×
 strategy × world — the multi-workload generalization of the Tables 2–3
 KADABRA-only sweep (tables23_instances.py).
 
     PYTHONPATH=src python -m benchmarks.run --only bench_instances
-    PYTHONPATH=src python -m benchmarks.bench_instances [--bench-scale]
+    PYTHONPATH=src python -m benchmarks.bench_instances \\
+        [--bench-scale] [--out DIR]
 
-CSV: instances/<workload>/<strategy>/W=<w>, us_per_call, tau=<samples>
+The artifact of record is ``<out>/BENCH_instances.json`` (schema in
+:mod:`benchmarks.artifact`; validated before writing, re-validated and
+uploaded by the CI ``bench-smoke`` job, summarized by
+``python -m benchmarks.perf_summary``).  The legacy one-line-per-cell CSV
+is still printed so ``benchmarks.run`` keeps forwarding progress rows.
+
+Every timed iteration re-runs the full adaptive loop with a fixed seed, so
+the stopped sample count τ must be identical across warmup + timed
+iterations — each iteration records ``res.num`` and the sweep fails loudly
+if they diverge (timed numbers must never mix differently-sized runs).
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+from typing import List
 
+from benchmarks.artifact import attach_speedups, write_bench
 from benchmarks.common import emit, timeit
 from repro.core.frames import FrameStrategy
 from repro.core.instances import available_instances, run_instance
 
 STRATS = (FrameStrategy.BARRIER, FrameStrategy.LOCAL_FRAME,
           FrameStrategy.SHARED_FRAME, FrameStrategy.INDEXED_FRAME)
+WORLDS = (1, 4)
 
 
-def run(bench_scale: bool = False) -> None:
+def run(bench_scale: bool = False, out_dir: str = "bench-artifacts") -> str:
     if bench_scale:
         from repro.configs.adaptive_instances import BENCH
         workloads = list(BENCH.values())
     else:
         workloads = list(available_instances())
+    rows: List[dict] = []
     for wl in workloads:
         name = wl if isinstance(wl, str) else wl.name
         for strat in STRATS:
-            for world in (1, 4):
-                tau = {}
+            for world in WORLDS:
+                taus: List[int] = []
 
-                def once(w=wl, s=strat, ww=world):
+                def once(w=wl, s=strat, ww=world, taus=taus):
                     est, res, _ = run_instance(w, strategy=s, world=ww)
-                    tau["v"] = res.num
+                    taus.append(int(res.num))
                     return est
 
-                t = timeit(once, warmup=1, iters=2)
+                # iters=3: timeit takes ts[len//2], a true median (with 2
+                # iterations that picks the max and one hiccup skews every
+                # speedup in the cell's group)
+                t = timeit(once, warmup=1, iters=3)
+                if len(set(taus)) != 1:
+                    raise AssertionError(
+                        f"{name}/{strat.value}/W={world}: τ varies across "
+                        f"iterations {taus} — timing would mix "
+                        f"differently-sized runs")
+                rows.append({"workload": name, "strategy": strat.value,
+                             "world": world, "us_per_call": t * 1e6,
+                             "tau": taus[0]})
                 emit(f"instances/{name}/{strat.value}/W={world}", t,
-                     f"tau={tau['v']}")
+                     f"tau={taus[0]}")
+    attach_speedups(rows)
+    path = write_bench("instances", rows, out_dir=out_dir,
+                       scale="bench" if bench_scale else "conformance")
+    print(f"# wrote {path}")
+    return str(path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-scale", action="store_true",
+                    help="use the configs/adaptive_instances.BENCH presets")
+    ap.add_argument("--out", default="bench-artifacts",
+                    help="directory for BENCH_instances.json")
+    args = ap.parse_args()
+    run(bench_scale=args.bench_scale, out_dir=args.out)
+    return 0
 
 
 if __name__ == "__main__":
-    run(bench_scale="--bench-scale" in sys.argv[1:])
+    raise SystemExit(main())

@@ -132,10 +132,17 @@ def paper_platform_model():
     n = 3.6e6
     C = 3.0e-3
     r_bw = 8e9
-    R = lambda T: T * n * 4 / r_bw
-    RS = lambda T: 2 * n * 4 / r_bw          # reduce-scatter: size-n, not T·n
-    straggler = lambda T: 1.0 + 0.18 * np.log2(max(T, 1))
-    bw = lambda T: 1.0 + max(0.0, (T - 14) / 14) * 0.9  # sampling slowdown
+    def R(T):
+        return T * n * 4 / r_bw
+
+    def RS(T):                         # reduce-scatter: size-n, not T·n
+        return 2 * n * 4 / r_bw
+
+    def straggler(T):
+        return 1.0 + 0.18 * np.log2(max(T, 1))
+
+    def bw(T):                         # sampling slowdown
+        return 1.0 + max(0.0, (T - 14) / 14) * 0.9
 
     def epoch(strategy, T):
         N0 = max(1, round(1000 / T ** 1.33))     # samples/thread/epoch

@@ -1,0 +1,73 @@
+"""Repo-level perf summary over ``BENCH_*.json`` artifacts.
+
+    python -m benchmarks.perf_summary [PATH ...]
+
+PATH entries are artifact files or directories to scan (default:
+``bench-artifacts``).  Every artifact is schema-validated on load; the
+summary prints one speedup-vs-BARRIER table per suite — the repo's
+Tables 2–3 analog over live data — plus a per-workload best-strategy line.
+Exit code is non-zero on missing/invalid artifacts, so CI can gate on it.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+from benchmarks.artifact import load_bench
+
+
+def _collect(paths: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    for p in (paths or ["bench-artifacts"]):
+        path = Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.glob("BENCH_*.json")))
+        else:
+            files.append(path)
+    return files
+
+
+def summarize(doc: Dict) -> str:
+    lines = [f"## suite={doc['suite']} scale={doc['scale']} "
+             f"jax={doc['jax_version']} platform={doc['platform']}",
+             f"{'workload':<16} {'strategy':<8} {'W':>2} "
+             f"{'us/call':>12} {'tau':>8} {'speedup':>8}"]
+    best: Dict[str, tuple] = {}
+    for r in sorted(doc["rows"], key=lambda r: (r["workload"], r["world"],
+                                                r["strategy"])):
+        sp = r["speedup_vs_barrier"]
+        lines.append(f"{r['workload']:<16} {r['strategy']:<8} "
+                     f"{r['world']:>2} {r['us_per_call']:>12.1f} "
+                     f"{r['tau']:>8} "
+                     + (f"{sp:>8.2f}" if sp is not None else f"{'-':>8}"))
+        if sp is not None:
+            cur = best.get(r["workload"])
+            if cur is None or sp > cur[0]:
+                best[r["workload"]] = (sp, r["strategy"], r["world"])
+    for wl, (sp, strat, w) in sorted(best.items()):
+        lines.append(f"# best[{wl}]: {strat} W={w} at {sp:.2f}x vs barrier")
+    return "\n".join(lines)
+
+
+def main(argv: Sequence[str] = ()) -> int:
+    files = _collect(list(argv) or sys.argv[1:])
+    if not files:
+        print("no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    bad = 0
+    for f in files:
+        try:
+            doc = load_bench(f)
+        except (ValueError, OSError) as e:
+            print(f"FAIL {f}: {e}", file=sys.stderr)
+            bad += 1
+            continue
+        print(summarize(doc))
+        print()
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,7 +11,8 @@ Emits ``name,us_per_call,derived`` CSV rows (plus ``#`` commentary lines).
 | fig3a_speedup        | Fig. 3a — epoch-based vs barrier (meas. + model) |
 | fig3b_fsweep         | Fig. 3b — shared-frame F sweep                   |
 | tables23_instances   | Tables 2–3 — per-instance absolute times         |
-| bench_instances      | ADS registry sweep — workload × strategy × W     |
+| bench_instances      | ADS registry sweep — workload × strategy × W;    |
+|                      | writes the BENCH_instances.json perf artifact    |
 | roofline_table       | §Roofline — 40-cell dry-run aggregate            |
 | bench_adaptive       | §3.1 (ours) — adaptive grad-accum savings        |
 """

@@ -15,7 +15,6 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import dataclasses
 
 from repro.models import ModelConfig
 from repro.launch import train as train_mod

@@ -1,26 +1,30 @@
 """Presets for the ADS instance layer (``repro.core.instances``).
 
-Mirrors ``configs/kadabra_bc.py`` for the two new workloads: each preset is
-a frozen instance object ready for ``register_instance`` (or direct
+Mirrors ``configs/kadabra_bc.py`` for the non-KADABRA workloads: each preset
+is a frozen instance object ready for ``register_instance`` (or direct
 ``build()``), sized either for CI-speed conformance runs (the registry
 defaults) or for benchmark-scale measurements.
 """
 
 from __future__ import annotations
 
-from repro.core.instances import (KadabraInstance, ReachabilityInstance,
-                                  TrianglesInstance)
+from repro.core.instances import (DiameterInstance, KadabraInstance,
+                                  ReachabilityInstance, TrianglesInstance,
+                                  WeightedSamplingInstance)
 
 # Conformance-sized (the registry defaults — tiny, exact oracles feasible).
 CONFORMANCE = {
     "kadabra": KadabraInstance(),
     "triangles": TrianglesInstance(),
     "reachability": ReachabilityInstance(),
+    "wrs": WeightedSamplingInstance(),
+    "diameter": DiameterInstance(),
 }
 
 # Benchmark-sized: big enough that strategy differences show up in wall
-# time, still CPU-tractable.  Exact oracles are NOT computed at this scale;
-# the conformance harness is the correctness gate, these are for timing.
+# time, still CPU-tractable.  Expensive exact oracles are NOT computed at
+# this scale; the conformance harness is the correctness gate, these are
+# for timing.
 BENCH = {
     "kadabra-m": KadabraInstance(name="kadabra-m", n_vertices=512,
                                  n_edges=2048, eps=0.05, batch=64,
@@ -31,4 +35,13 @@ BENCH = {
     "reachability-m": ReachabilityInstance(name="reachability-m", rows=4,
                                            cols=4, t=15, eps=0.02,
                                            batch=256, compute_oracle=False),
+    # WRS oracle is O(n) — always computed; max_samples keeps the int32
+    # moment sums exact (max_samples·(value_scale−1)² < 2³¹).
+    "wrs-m": WeightedSamplingInstance(name="wrs-m", n_items=1 << 16,
+                                      rtol=0.01, batch=4096,
+                                      max_samples=1 << 19),
+    "diameter-m": DiameterInstance(name="diameter-m", kind="er",
+                                   n_vertices=512, n_edges=2048,
+                                   graph_seed=7, gap=2, batch=32,
+                                   max_samples=8192, compute_oracle=False),
 }

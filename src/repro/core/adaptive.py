@@ -26,7 +26,7 @@ import numpy as np
 
 from .epoch import EpochConfig, EpochState, rounds_for_world, run_sharded, \
     run_virtual, run_worker
-from .frames import FrameStrategy, StateFrame, sequential_collectives
+from .frames import FrameStrategy, sequential_collectives
 
 PyTree = Any
 

@@ -43,7 +43,6 @@ dependence: a frame snapshot is a value, not a memory location.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -119,7 +119,8 @@ class Collectives:
 
 def sequential_collectives() -> Collectives:
     """W=1: everything is the identity."""
-    ident = lambda x: x
+    def ident(x):
+        return x
     return Collectives(reduce_frames=ident, reduce_scalar=ident,
                        all_frames=lambda f: jax.tree.map(lambda x: x[None], f),
                        scatter_frames=ident, world=1)

@@ -22,6 +22,9 @@ Registered out of the box:
 * ``kadabra``       — betweenness centrality (the paper's case study)
 * ``triangles``     — triangle counting via wedge sampling
 * ``reachability``  — s–t reachability under edge percolation
+* ``wrs``           — weighted-mean estimation via alias-table draws
+                      (Hübschle-Schneider & Sanders weighted sampling)
+* ``diameter``      — graph-diameter estimation via double-sweep BFS
 
 Adding a workload = implement ``build()`` returning a
 :class:`BuiltInstance` + ``register_instance(...)`` (see README §Instance
@@ -32,7 +35,7 @@ this module stays cheap and cycle-free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+from typing import Any, Callable, Dict, Protocol, Tuple, runtime_checkable
 
 import jax
 import numpy as np
@@ -308,6 +311,139 @@ class ReachabilityInstance:
             max_epochs=self.max_epochs)
 
 
+@dataclasses.dataclass(frozen=True)
+class WeightedSamplingInstance:
+    """Weighted-mean estimation over alias-table draws (parallel weighted
+    random sampling, Hübschle-Schneider & Sanders).
+
+    Heavy-tailed (Pareto) weights — the regime alias tables exist for —
+    over quantized values bounded away from 0 so the relative-error
+    stopping target is well-conditioned.  The exact oracle is O(n) and is
+    always computed.
+    """
+
+    name: str = "wrs"
+    n_items: int = 256
+    weight_seed: int = 3
+    rtol: float = 0.05            # relative half-width target on μ̂
+    delta: float = 0.1
+    batch: int = 128
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+    # int32 moment sums stay exact while max_samples·(value_scale−1)² < 2³¹.
+    max_samples: int = 1 << 19
+    value_scale: int = 32
+
+    def _setup(self):
+        def make():
+            from ..sampling.alias import build_alias_table, weighted_mean_exact
+            rng = np.random.default_rng(self.weight_seed)
+            w = rng.pareto(1.5, size=self.n_items) + 1e-3
+            values_q = rng.integers(self.value_scale // 4, self.value_scale,
+                                    size=self.n_items)
+            table = build_alias_table(w)
+            mu = weighted_mean_exact(w, values_q, self.value_scale)
+            return table, values_q, mu
+        return _cached(("wrs", self), make)
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance:
+        import jax.numpy as jnp
+
+        from ..core.stopping import RelativeErrorCondition
+        from ..sampling.alias import (make_weighted_sample_fn,
+                                      weighted_frame_template)
+        table, values_q, mu = self._setup()
+        pad = _pad_for(self.n_items, world, strategy)
+        sample_fn = make_weighted_sample_fn(table,
+                                            jnp.asarray(values_q, jnp.int32),
+                                            self.batch, pad_to=pad)
+        cond = RelativeErrorCondition(rtol=self.rtol, delta=self.delta,
+                                      scale=float(self.value_scale),
+                                      max_samples=self.max_samples)
+        scale = float(self.value_scale)
+
+        def estimate(data: PyTree, num: float) -> np.ndarray:
+            return np.asarray([float(data["s1"]) / (scale * max(num, 1.0))])
+
+        return BuiltInstance(
+            name=self.name, sample_fn=sample_fn, check_fn=cond,
+            template=weighted_frame_template(self.n_items, pad),
+            init_carry=None, samples_per_round=self.batch,
+            true_len=self.n_items,
+            eps=2.0 * self.rtol * mu, delta=self.delta,
+            oracle=np.asarray([mu]), estimate=estimate,
+            rounds_per_epoch=self.rounds_per_epoch,
+            max_epochs=self.max_epochs)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiameterInstance:
+    """Graph-diameter estimation via double-sweep BFS lower bounds.
+
+    ``kind="grid"`` (road-network analog: high diameter, the double sweep's
+    best case) or ``kind="er"``.  Assumes one connected component (the gap
+    certificate reasons about the global diameter); the conformance-sized
+    grid satisfies this by construction.  ``diameter_exact`` is O(n·m) —
+    benchmark presets disable it.
+    """
+
+    name: str = "diameter"
+    kind: str = "grid"
+    rows: int = 5
+    cols: int = 5
+    n_vertices: int = 64          # for kind="er"
+    n_edges: int = 192
+    graph_seed: int = 4
+    gap: int = 0                  # certified |diam − estimate| tolerance
+    batch: int = 8
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+    max_samples: int = 4096
+    compute_oracle: bool = True
+
+    def _graph(self):
+        def make():
+            from ..graphs import erdos_renyi, grid2d
+            from ..graphs.diameter import diameter_exact
+            g = grid2d(self.rows, self.cols) if self.kind == "grid" \
+                else erdos_renyi(self.n_vertices, self.n_edges,
+                                 seed=self.graph_seed)
+            diam = float(diameter_exact(g)) if self.compute_oracle \
+                else float("nan")
+            return g, diam
+        return _cached(("diameter", self), make)
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance:
+        from ..core.stopping import EccentricityGapCondition
+        from ..graphs.diameter import (diameter_estimate, frame_template,
+                                       make_sweep_sample_fn)
+        g, diam = self._graph()
+        bins = g.n + 1
+        pad = _pad_for(bins, world, strategy)
+        sample_fn = make_sweep_sample_fn(g, self.batch, gap=self.gap,
+                                         pad_to=pad)
+        cond = EccentricityGapCondition(gap=self.gap,
+                                        max_samples=self.max_samples)
+
+        def estimate(data: PyTree, num: float) -> np.ndarray:
+            return np.asarray([diameter_estimate(data["ecc_hist"])])
+
+        return BuiltInstance(
+            name=self.name, sample_fn=sample_fn, check_fn=cond,
+            template=frame_template(g, pad), init_carry=None,
+            samples_per_round=self.batch, true_len=bins,
+            eps=self.gap + 0.5, delta=0.0,
+            oracle=np.asarray([diam]), estimate=estimate,
+            rounds_per_epoch=self.rounds_per_epoch,
+            max_epochs=self.max_epochs)
+
+
 register_instance(KadabraInstance())
 register_instance(TrianglesInstance())
 register_instance(ReachabilityInstance())
+register_instance(WeightedSamplingInstance())
+register_instance(DiameterInstance())

@@ -12,6 +12,10 @@ consistency — Prop. 1 of the paper).  Implemented conditions:
 * :class:`HoeffdingCondition` / :class:`EmpiricalBernsteinCondition` —
   generic (ε,δ) mean estimation; used for adaptive metric evaluation
   (serve-side) and as simple test oracles.
+* :class:`RelativeErrorCondition` — relative-error (rtol,δ) mean estimation
+  via empirical Bernstein; drives the weighted-random-sampling workload.
+* :class:`EccentricityGapCondition` — double-sweep diameter estimation:
+  stop once a sample certifies the lower/upper eccentricity gap closed.
 * :class:`GradVarianceCondition` — adaptive gradient accumulation: stop
   sampling microbatch gradients once the relative standard error of the
   gradient-norm estimate is below target (the framework's "beyond-paper"
@@ -210,6 +214,75 @@ class PercolationCondition:
         eb_ok = jnp.logical_and(frame.num >= 2, half <= self.eps)
         stop = jnp.logical_or(eb_ok, frame.num >= self.max_samples)
         return stop, {"p_hat": mean, "half_width": half, "tau": frame.num}
+
+
+@dataclasses.dataclass(frozen=True)
+class RelativeErrorCondition:
+    """Relative-error stopping for weighted-mean estimation (the WRS
+    workload): stop once the empirical-Bernstein half-width is below
+    ``rtol`` × the running mean estimate,
+
+        sqrt(2·V̂·log(3/δ)/τ) + 3·R·log(3/δ)/τ  ≤  rtol · μ̂
+
+    which gives |μ̂ − μ| ≤ rtol·μ̂ w.p. ≥ 1−δ — the natural guarantee when
+    the estimand's magnitude is unknown a priori (H&S weighted sampling).
+
+    ``scale`` undoes integer value quantization: frames carry
+    s1 = Σ xq, s2 = Σ xq² with x = xq/scale, so the moments in value units
+    are s1/scale and s2/scale².  Only the scalar moments and ``num`` enter
+    the verdict (fully reduced under every strategy incl. SHARED_FRAME
+    shards ⇒ shard-safe); a static ``max_samples`` cap (the ω analog)
+    guarantees termination even for μ near 0.
+    """
+
+    rtol: float
+    delta: float
+    scale: float = 1.0
+    value_range: float = 1.0
+    min_samples: int = 2
+    max_samples: int = 1 << 20
+
+    def __call__(self, frame: StateFrame):
+        tau = jnp.maximum(frame.num.astype(jnp.float32), 2.0)
+        s1 = frame.data["s1"].astype(jnp.float32) / self.scale
+        s2 = frame.data["s2"].astype(jnp.float32) / self.scale ** 2
+        mean, half = empirical_bernstein_half_width(
+            s1, s2, tau, self.delta, self.value_range)
+        rel_ok = half <= self.rtol * jnp.maximum(mean, 1e-12)
+        stop = jnp.logical_or(
+            jnp.logical_and(frame.num >= self.min_samples, rel_ok),
+            frame.num >= self.max_samples)
+        return stop, {"mean": mean, "half_width": half, "tau": frame.num}
+
+
+@dataclasses.dataclass(frozen=True)
+class EccentricityGapCondition:
+    """Eccentricity-gap stopping for double-sweep diameter estimation.
+
+    Each sample runs a double sweep from a random vertex v: with
+    u = argmax dist(v,·), it observes the lower bound ecc(u) ≤ diam and the
+    upper bound 2·ecc(v) ≥ diam, and contributes a *certificate* when its
+    own gap closes:  2·ecc(v) − ecc(u) ≤ gap  ⇒  diam − ecc(u) ≤ gap.
+    Stop once ``min_certs`` certificates have accumulated (the estimate —
+    the best lower bound seen — is then within ``gap`` of the true
+    diameter), or at the static ``max_samples`` cap.
+
+    The verdict reads only the scalar certificate count and ``num`` (both
+    fully reduced under every strategy, SHARED_FRAME shards included ⇒
+    shard-safe); the eccentricity histogram the estimate is extracted from
+    is carried as a vector leaf but never enters the verdict.
+    """
+
+    gap: int = 0
+    min_certs: int = 1
+    max_samples: int = 1 << 16
+
+    def __call__(self, frame: StateFrame):
+        certs = frame.data["cert"]
+        stop = jnp.logical_or(certs >= self.min_certs,
+                              frame.num >= self.max_samples)
+        return stop, {"certs": certs, "tau": frame.num,
+                      "gap": jnp.int32(self.gap)}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

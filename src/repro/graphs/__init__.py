@@ -14,6 +14,8 @@ from .reachability import (make_percolation_sample_fn, reachability_exact,
                            reached_masked)
 from .triangles import (make_wedge_sample_fn, triangle_estimate,
                         triangles_exact, wedge_weights)
+from .diameter import (diameter_estimate, diameter_exact, double_sweep,
+                       make_sweep_sample_fn)
 
 __all__ = [
     "Graph", "from_edges", "erdos_renyi", "barabasi_albert", "grid2d",
@@ -23,4 +25,6 @@ __all__ = [
     "make_wedge_sample_fn", "triangles_exact", "triangle_estimate",
     "wedge_weights",
     "make_percolation_sample_fn", "reachability_exact", "reached_masked",
+    "diameter_estimate", "diameter_exact", "double_sweep",
+    "make_sweep_sample_fn",
 ]

@@ -4,6 +4,7 @@
 |-------------------|---------------------------------------------------------|
 | ``frame_accum``   | Θ(T·n) state-frame accumulation (Alg. 2 line 27)        |
 | ``bfs_frontier``  | one BFS level of SAMPLE() (CSR frontier expansion)      |
+| ``alias_draw``    | batched alias-table draws (weighted sampling SAMPLE())  |
 | ``flash_attention``| prefill/train attention with causal/window block skip  |
 | ``ssm_scan``      | Mamba selective-scan recurrence                         |
 | ``rglru_scan``    | RG-LRU gated linear recurrence                          |

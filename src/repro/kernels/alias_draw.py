@@ -1,0 +1,62 @@
+"""Pallas kernel: batched alias-table draws — the O(1) weighted-sampling
+hot loop (Hübschle-Schneider & Sanders).
+
+For every draw b:  bucket = ⌊u₁·n⌋;  idx = bucket if u₂ < prob[bucket]
+else alias[bucket].
+
+Tiling: grid over draw blocks; the ``prob``/``alias`` tables stay
+VMEM-resident across the serial grid while the uniform streams and the
+index output are blocked — the same table-resident/stream-blocked shape as
+``bfs_frontier``.  The two gathers per draw are VPU-served from VMEM, so
+the kernel is bandwidth-bound on the u₁/u₂ streams.  Table size is bounded
+by VMEM (~2M buckets at f32+i32); larger tables would need a two-level
+(grouped) alias structure — out of scope here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(prob_ref, alias_ref, u1_ref, u2_ref, idx_ref, *, n: int):
+    u1 = u1_ref[...]
+    bucket = jnp.minimum((u1 * n).astype(jnp.int32), n - 1)
+    keep = u2_ref[...] < prob_ref[bucket]
+    idx_ref[...] = jnp.where(keep, bucket, alias_ref[bucket])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def alias_draw(prob: jax.Array, alias: jax.Array, u1: jax.Array,
+               u2: jax.Array, *, block_b: int = 4096,
+               interpret: bool = False) -> jax.Array:
+    """Batched alias draws.
+
+    prob: (n,) f32 in [0,1]; alias: (n,) int32; u1/u2: (b,) f32 uniforms
+    → idx (b,) int32 with P[idx = i] = wᵢ/Σw (exact for the table).
+    """
+    b = u1.shape[0]
+    n = prob.shape[0]
+    block_b = min(block_b, b)
+    pad = (-b) % block_b
+    if pad:  # padded draws hit bucket 0 and are sliced off below
+        u1 = jnp.pad(u1, (0, pad))
+        u2 = jnp.pad(u2, (0, pad), constant_values=1.0)
+    bp = b + pad
+    idx = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda e: (0,)),
+            pl.BlockSpec((n,), lambda e: (0,)),
+            pl.BlockSpec((block_b,), lambda e: (e,)),
+            pl.BlockSpec((block_b,), lambda e: (e,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda e: (e,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.int32),
+        interpret=interpret,
+    )(prob, alias, u1, u2)
+    return idx[:b]

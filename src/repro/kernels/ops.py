@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 
 from . import ref as _ref
+from .alias_draw import alias_draw as _alias_kernel
 from .bfs_frontier import bfs_frontier as _bfs_kernel
 from .flash_attention import flash_attention as _fa_kernel
 from .frame_accum import frame_accum as _fa_accum_kernel
@@ -75,3 +76,10 @@ def bfs_frontier(src, dst, sigma, dist, level):
         return _ref.bfs_frontier_ref(src, dst, sigma, dist, level)
     return _bfs_kernel(src, dst, sigma, dist, level,
                        interpret=mode == "interpret")
+
+
+def alias_draw(prob, alias, u1, u2):
+    mode = _kernel_mode()
+    if mode == "ref":
+        return _ref.alias_draw_ref(prob, alias, u1, u2)
+    return _alias_kernel(prob, alias, u1, u2, interpret=mode == "interpret")

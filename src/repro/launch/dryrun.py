@@ -98,8 +98,8 @@ def _lower_compile(cfg, shape, mesh, verbose=True, flags=None):
 
 def _diff_variants(cfg):
     """(base_cfg, two_cfg[, extra]) unrolled variants for layer-differencing."""
-    rep = lambda **kw: dataclasses.replace(
-        cfg, scan_layers=False, grad_accum=1, **kw)
+    def rep(**kw):
+        return dataclasses.replace(cfg, scan_layers=False, grad_accum=1, **kw)
     if cfg.family == "encdec":
         return [("base", rep(n_layers=1, enc_layers=1)),
                 ("dec2", rep(n_layers=2, enc_layers=1)),
@@ -119,7 +119,8 @@ def _corrected_cost(cfg, shape, mesh, flags=None) -> dict:
                                      flags=flags)
         costs[tag] = _cost_dict(compiled, chips)
     keys = ("flops", "bytes", "coll_bytes")
-    pick = lambda c: {k: c[k] for k in keys}
+    def pick(c):
+        return {k: c[k] for k in keys}
     if cfg.family == "encdec":
         dec = {k: costs["dec2"][k] - costs["base"][k] for k in keys}
         enc = {k: costs["enc2"][k] - costs["base"][k] for k in keys}
@@ -161,7 +162,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              opt: bool = False) -> dict:
     import dataclasses as _dc
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.sharding import PolicyFlags, default_flags
+    from repro.launch.sharding import default_flags
     from repro.models import SHAPES, cell_is_applicable, get_config
     from repro.analysis.roofline import roofline_terms, model_flops
 

@@ -16,7 +16,6 @@ launch configs keep pod-DP as the default (DESIGN.md §9 rationale).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

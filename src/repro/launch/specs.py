@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import Model, ModelConfig, ShapeConfig
-from repro.models.layers import ParamDef, ShardingRules, param_specs
+from repro.models.layers import ParamDef, ShardingRules
 from repro.launch.sharding import PolicyFlags, build_rules, default_flags
 
 PyTree = Any
@@ -148,8 +148,9 @@ def input_specs(arch: str | ModelConfig, shape: ShapeConfig, mesh: Mesh,
         ospecs_leaf = jax.tree.map(
             lambda d: NamedSharding(mesh, orules.spec_for(d)), defs,
             is_leaf=lambda x: isinstance(x, ParamDef))
-        f32 = lambda t: jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+        def f32(t):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
         from repro.optim.adamw import AdamWState
         opt_state = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
                                mu=f32(params), nu=f32(params))

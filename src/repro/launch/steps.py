@@ -5,8 +5,7 @@ These are the functions the dry-run lowers and the launchers jit.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,7 @@ from repro.checkpoint import CheckpointManager
 from repro.data import DataCursor, TokenStream
 from repro.models import Model, get_config
 from repro.optim import (AdamWConfig, AdaptiveAccumConfig, adamw_init,
-                         adaptive_accumulate, cosine_schedule)
+                         adaptive_accumulate)
 from repro.optim.adamw import adamw_update
 from repro.runtime import FailureEvent, FailureInjector, Heartbeat
 

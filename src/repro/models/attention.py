@@ -19,8 +19,6 @@ Three execution paths:
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -9,7 +9,7 @@ live in ``repro/configs/<arch>.py`` and register themselves here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -45,7 +45,8 @@ def _ls_bwd(res, g):
     # log-depth level: ~log₂(S)× the pair size; see EXPERIMENTS.md §Perf).
     a, h = res
     a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
-    rev = lambda x: jnp.flip(x, axis=1)
+    def rev(x):
+        return jnp.flip(x, axis=1)
     gamma = rev(_assoc_scan(rev(a_next), rev(g), 1))
     h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
     return gamma * h_prev, gamma

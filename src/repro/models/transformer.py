@@ -26,8 +26,7 @@ configurable remat.  The functional API is
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +36,8 @@ from .config import ModelConfig
 from .layers import (ParamDef, init_params, abstract_params, rms_norm, rotary,
                      softmax_cross_entropy, swiglu)
 from .moe import moe_defs, moe_ffn
-from .rglru import (RGLRUState, rglru_block, rglru_decode_step, rglru_defs,
-                    rglru_init_state)
-from .ssm import (MambaState, mamba_block, mamba_decode_step, mamba_defs,
-                  mamba_init_state)
+from .rglru import RGLRUState, rglru_block, rglru_decode_step, rglru_defs
+from .ssm import MambaState, mamba_block, mamba_decode_step, mamba_defs
 
 PyTree = Any
 

@@ -33,7 +33,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params: PyTree) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       mu=jax.tree.map(zeros, params),
                       nu=jax.tree.map(zeros, params))

@@ -21,7 +21,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.frames import StateFrame, combine, zeros_like_frame
+from ..core.frames import StateFrame, combine
 from ..core.stopping import GradVarianceCondition
 
 PyTree = Any

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
-import jax
 
 from repro.checkpoint import CheckpointManager
 

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import threading
 import time
 from typing import Callable, Optional
 

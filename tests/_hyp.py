@@ -9,6 +9,8 @@ tests run everywhere.
 
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     import hypothesis.strategies as st
     from hypothesis import given, settings

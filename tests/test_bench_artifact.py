@@ -1,0 +1,81 @@
+"""BENCH_*.json perf-artifact pipeline: writer/validator round-trip, schema
+violations, speedup attachment, and the perf summary."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+# benchmarks/ is a sibling of tests/ — importable from the repo root
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.artifact import (SCHEMA_VERSION, attach_speedups,  # noqa: E402
+                                 load_bench, validate_bench, write_bench)
+from benchmarks.perf_summary import summarize  # noqa: E402
+
+
+def _rows():
+    return [
+        {"workload": "wrs", "strategy": "barrier", "world": 1,
+         "us_per_call": 100.0, "tau": 1024},
+        {"workload": "wrs", "strategy": "local", "world": 1,
+         "us_per_call": 50.0, "tau": 1024},
+        {"workload": "diameter", "strategy": "indexed", "world": 4,
+         "us_per_call": 75.0, "tau": 16},
+    ]
+
+
+def test_attach_speedups():
+    rows = attach_speedups(_rows())
+    by = {(r["workload"], r["strategy"]): r for r in rows}
+    assert by[("wrs", "barrier")]["speedup_vs_barrier"] == 1.0
+    assert by[("wrs", "local")]["speedup_vs_barrier"] == 2.0
+    # no BARRIER baseline for that (workload, world) cell → null
+    assert by[("diameter", "indexed")]["speedup_vs_barrier"] is None
+
+
+def test_write_load_roundtrip(tmp_path):
+    path = write_bench("instances", attach_speedups(_rows()),
+                       out_dir=tmp_path, scale="conformance")
+    assert path.name == "BENCH_instances.json"
+    doc = load_bench(path)
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert doc["suite"] == "instances" and len(doc["rows"]) == 3
+    assert {"jax_version", "platform", "created_unix"} <= set(doc)
+    assert not validate_bench(doc)
+
+
+def test_writer_refuses_invalid_rows(tmp_path):
+    bad = [{"workload": "wrs", "strategy": "warp", "world": 1,
+            "us_per_call": 1.0, "tau": 1, "speedup_vs_barrier": None}]
+    with pytest.raises(ValueError, match="strategy"):
+        write_bench("instances", bad, out_dir=tmp_path)
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.pop("jax_version"), "jax_version"),
+    (lambda d: d.update(schema_version=99), "schema_version"),
+    (lambda d: d.update(scale="huge"), "scale"),
+    (lambda d: d.update(rows=[]), "empty"),
+    (lambda d: d["rows"][0].pop("tau"), "tau"),
+    (lambda d: d["rows"][0].update(us_per_call=0.0), "us_per_call"),
+    (lambda d: d["rows"][0].update(world=0), "world"),
+    (lambda d: d["rows"][1].update(speedup_vs_barrier=None), "null"),
+    (lambda d: d["rows"][2].update(speedup_vs_barrier=3.0), "without"),
+])
+def test_validator_catches(tmp_path, mutate, needle):
+    path = write_bench("instances", attach_speedups(_rows()),
+                       out_dir=tmp_path)
+    doc = json.loads(path.read_text())
+    mutate(doc)
+    errs = validate_bench(doc)
+    assert errs and any(needle in e for e in errs), errs
+
+
+def test_perf_summary_output(tmp_path):
+    path = write_bench("instances", attach_speedups(_rows()),
+                       out_dir=tmp_path)
+    out = summarize(load_bench(path))
+    assert "suite=instances" in out
+    assert "best[wrs]: local W=1 at 2.00x" in out

@@ -1,0 +1,137 @@
+"""JAX version-compat resolvers (`repro.core.compat`): both branches of
+every resolver — new API present vs. absent (via monkeypatch) — so jax
+version drift fails loudly here instead of deep inside the engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.compat as compat
+
+
+# ------------------------------------------------------------------ shard_map
+def test_resolve_shard_map_new_api(monkeypatch):
+    def fake(f, **kw):
+        return f
+
+    monkeypatch.setattr(jax, "shard_map", fake, raising=False)
+    sm, kwarg = compat._resolve_shard_map()
+    assert sm is fake and kwarg == "check_vma"
+
+
+def test_resolve_shard_map_old_api(monkeypatch):
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    from jax.experimental.shard_map import shard_map as old
+    sm, kwarg = compat._resolve_shard_map()
+    assert sm is old and kwarg == "check_rep"
+
+
+def test_shard_map_wrapper_maps_check_kwarg(monkeypatch):
+    recorded = {}
+
+    def fake(f, *, mesh, in_specs, out_specs, **kw):
+        recorded.clear()
+        recorded.update(kw)
+        return f
+
+    monkeypatch.setattr(compat, "_SHARD_MAP", fake)
+    monkeypatch.setattr(compat, "_CHECK_KWARG", "check_rep")
+    compat.shard_map(lambda x: x, mesh=None, in_specs=(), out_specs=())
+    assert recorded == {"check_rep": True}
+    monkeypatch.setattr(compat, "_CHECK_KWARG", "check_vma")
+    compat.shard_map(lambda x: x, mesh=None, in_specs=(), out_specs=(),
+                     check_vma=False)
+    assert recorded == {"check_vma": False}
+
+
+def test_shard_map_real_resolution_importable():
+    """Whatever this jax ships, the module-level resolution must be a
+    callable plus one of the two known kwarg spellings."""
+    assert callable(compat._SHARD_MAP)
+    assert compat._CHECK_KWARG in ("check_vma", "check_rep")
+
+
+# ------------------------------------------------------------------ axis_size
+def test_axis_size_new_api(monkeypatch):
+    monkeypatch.setattr(jax.lax, "axis_size",
+                        lambda name: ("size-of", name), raising=False)
+    assert compat.axis_size("i") == ("size-of", "i")
+
+
+def test_axis_size_psum_fallback(monkeypatch):
+    monkeypatch.delattr(jax.lax, "axis_size", raising=False)
+    out = jax.vmap(lambda x: compat.axis_size("i") * x, axis_name="i")(
+        jnp.ones((4,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.full(4, 4))
+
+
+# ------------------------------------------------------- AxisType / make_mesh
+class _FakeAxisType:
+    Auto = "auto"
+
+
+def _recording_make_mesh(recorded):
+    def fake(shape, axes, **kw):
+        recorded.clear()
+        recorded.update(shape=shape, axes=axes, **kw)
+        return "mesh"
+    return fake
+
+
+def test_make_mesh_with_axis_type(monkeypatch):
+    recorded = {}
+    monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType,
+                        raising=False)
+    monkeypatch.setattr(jax, "make_mesh", _recording_make_mesh(recorded))
+    assert compat.make_mesh((2, 1), ("a", "b")) == "mesh"
+    assert recorded["axis_types"] == ("auto", "auto")
+
+
+def test_make_mesh_axis_type_present_but_disabled(monkeypatch):
+    recorded = {}
+    monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType,
+                        raising=False)
+    monkeypatch.setattr(jax, "make_mesh", _recording_make_mesh(recorded))
+    compat.make_mesh((2,), ("a",), auto_axis_types=False)
+    assert "axis_types" not in recorded
+
+
+def test_make_mesh_without_axis_type(monkeypatch):
+    recorded = {}
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    monkeypatch.setattr(jax, "make_mesh", _recording_make_mesh(recorded))
+    compat.make_mesh((2,), ("a",))
+    assert recorded == {"shape": (2,), "axes": ("a",)}
+
+
+def test_make_mesh_real_jax():
+    mesh = compat.make_mesh((1,), ("x",))
+    assert dict(mesh.shape) == {"x": 1}
+
+
+# ------------------------------------------------------------------- set_mesh
+def test_set_mesh_resolution_order(monkeypatch):
+    monkeypatch.setattr(jax, "set_mesh", lambda m: ("new", m), raising=False)
+    assert compat.set_mesh("M") == ("new", "M")
+    monkeypatch.delattr(jax, "set_mesh", raising=False)
+    monkeypatch.setattr(jax.sharding, "use_mesh", lambda m: ("use", m),
+                        raising=False)
+    assert compat.set_mesh("M") == ("use", "M")
+    monkeypatch.delattr(jax.sharding, "use_mesh", raising=False)
+    # oldest fallback: the Mesh object itself is the context manager
+    assert compat.set_mesh("M") == "M"
+
+
+# -------------------------------------------------------------- cost_analysis
+def test_cost_analysis_shapes():
+    class Compiled:
+        def __init__(self, ca):
+            self._ca = ca
+
+        def cost_analysis(self):
+            return self._ca
+
+    assert compat.cost_analysis(Compiled({"flops": 2.0})) == {"flops": 2.0}
+    assert compat.cost_analysis(Compiled([{"flops": 3.0}])) == {"flops": 3.0}
+    assert compat.cost_analysis(Compiled([])) == {}
+    assert compat.cost_analysis(Compiled(None)) == {}

@@ -14,7 +14,7 @@ from repro.core.frames import (FrameStrategy, StateFrame, accumulate,
                                combine, zeros_like_frame)
 from repro.core.instances import available_instances
 
-INSTANCES = ("kadabra", "triangles", "reachability")
+INSTANCES = ("kadabra", "triangles", "reachability", "wrs", "diameter")
 WORLDS = (1, 2, 4)
 
 

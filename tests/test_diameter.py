@@ -1,0 +1,63 @@
+"""Diameter workload: exact oracle, double-sweep bounds, histogram frames,
+and the eccentricity-gap stopping rule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.frames import StateFrame
+from repro.core.stopping import EccentricityGapCondition
+from repro.graphs import (diameter_estimate, diameter_exact, double_sweep,
+                          erdos_renyi, grid2d, make_sweep_sample_fn)
+
+
+def test_diameter_exact_grid_closed_form():
+    for rows, cols in ((3, 4), (5, 5), (2, 7)):
+        g = grid2d(rows, cols)
+        assert diameter_exact(g) == (rows - 1) + (cols - 1)
+
+
+def test_diameter_exact_er_matches_bfs_bounds():
+    g = erdos_renyi(40, 120, seed=5)
+    diam = diameter_exact(g)
+    # any double sweep: ecc(u) ≤ diam ≤ 2·ecc(v)
+    for v in (0, 7, 23):
+        ecc_v, ecc_u = double_sweep(g, jnp.int32(v), max_levels=g.n)
+        assert int(ecc_u) <= diam <= 2 * int(ecc_v)
+
+
+def test_double_sweep_grid_bounds():
+    g = grid2d(5, 5)
+    # from the center (ecc = 4): u is a corner, ecc(u) = 8 = diam → gap 0
+    ecc_v, ecc_u = double_sweep(g, jnp.int32(12), max_levels=g.n)
+    assert int(ecc_v) == 4 and int(ecc_u) == 8
+    # from a corner: the sweep still finds the true diameter lower bound
+    ecc_v, ecc_u = double_sweep(g, jnp.int32(0), max_levels=g.n)
+    assert int(ecc_v) == 8 and int(ecc_u) == 8
+
+
+def test_sweep_sample_fn_histogram_and_certs():
+    g = grid2d(5, 5)
+    fn = make_sweep_sample_fn(g, batch=32, gap=0, pad_to=28)
+    frame, _ = fn(jax.random.key(0), None)
+    hist = np.asarray(frame.data["ecc_hist"])
+    assert int(frame.num) == 32 and hist.sum() == 32
+    # every double sweep on a grid lands the exact diameter lower bound
+    assert diameter_estimate(hist) == 8.0
+    # certificates are exactly the draws of the unique central vertex
+    assert 0 <= int(frame.data["cert"]) <= 32
+
+
+def test_eccentricity_gap_condition():
+    cond = EccentricityGapCondition(gap=0, min_certs=1, max_samples=100)
+
+    def frame(num, certs):
+        return StateFrame(num=jnp.int32(num),
+                          data={"cert": jnp.int32(certs),
+                                "ecc_hist": jnp.zeros((8,), jnp.int32)})
+
+    assert not bool(cond(frame(10, 0))[0])
+    assert bool(cond(frame(10, 1))[0])       # certificate stops
+    assert bool(cond(frame(100, 0))[0])      # static cap stops
+    stop, aux = cond(frame(10, 3))
+    assert int(aux["certs"]) == 3 and int(aux["gap"]) == 0

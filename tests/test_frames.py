@@ -3,10 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.core.frames import (FrameStrategy, StateFrame, accumulate,
+from repro.core.frames import (StateFrame, accumulate,
                                axis_collectives, combine, shard_frame_pad,
                                zeros_like_frame)
 

@@ -3,16 +3,15 @@ roofline math."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.hlo import collective_bytes, parse_shape_bytes
 from repro.core.compat import shard_map
-from repro.analysis.roofline import (V5E, combine_layer_diff, model_flops,
+from repro.analysis.roofline import (combine_layer_diff, model_flops,
                                      roofline_terms)
 from repro.models import SHAPES, get_config
-from repro.models.layers import ParamDef, ShardingRules
+from repro.models.layers import ShardingRules
 
 
 def rules_16():

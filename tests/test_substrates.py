@@ -1,9 +1,6 @@
 """Checkpointing (roundtrip, atomicity, elastic reshard), data determinism,
 optimizer, compression, adaptive accumulation."""
 
-import json
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np

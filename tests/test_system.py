@@ -2,7 +2,6 @@
 injection, serve loop, sharded epoch engine on a mesh, and a subprocess
 mini dry-run."""
 
-import json
 import os
 import subprocess
 import sys
