@@ -32,6 +32,13 @@ Row (one measured cell)::
 Usage::
 
     python -m benchmarks.artifact validate out/BENCH_*.json
+    python -m benchmarks.artifact diff OLD.json NEW.json [--rtol 0.25]
+
+``diff`` is the regression gate: it joins two artifacts on
+(workload, strategy, world), applies a tolerance band (relative ``--rtol``
+plus an absolute ``--min-us`` floor below which CPU timing noise dominates),
+and exits non-zero on regressions, τ changes, or rows that disappeared —
+CI runs it ``continue-on-error`` as a report; locally it is a real gate.
 """
 
 from __future__ import annotations
@@ -176,14 +183,84 @@ def load_bench(path: "str | Path") -> Dict[str, Any]:
     return doc
 
 
-def _cli(argv: Optional[Sequence[str]] = None) -> int:
-    argv = list(sys.argv[1:] if argv is None else argv)
-    if not argv or argv[0] != "validate" or len(argv) < 2:
-        print("usage: python -m benchmarks.artifact validate FILE...",
-              file=sys.stderr)
-        return 2
+# ---------------------------------------------------------------------------
+# Artifact diff — the regression gate between two BENCH_*.json files.
+# ---------------------------------------------------------------------------
+
+def _row_key(row: Dict[str, Any]) -> tuple:
+    return (row["workload"], row["strategy"], row["world"])
+
+
+def diff_bench(old: Dict[str, Any], new: Dict[str, Any], *,
+               rtol: float = 0.25, min_us: float = 50.0) -> Dict[str, Any]:
+    """Compare two validated artifacts row-by-row with tolerance bands.
+
+    A cell regresses when its ``us_per_call`` grows by more than ``rtol``
+    relative *and* more than ``min_us`` absolute (conformance-scale CPU
+    numbers are compile-dominated; sub-``min_us`` jitter is not signal).
+    τ differences are always failures — the adaptive loop stopped at a
+    different sample count, i.e. the semantics changed, so the timing
+    comparison is void.  Rows present in ``old`` but missing from ``new``
+    fail too (a silently dropped cell is not a pass); rows new in ``new``
+    are reported but never fail.
+
+    Returns a report dict::
+
+        {"ok": bool, "regressions": [...], "improvements": [...],
+         "tau_changes": [...], "missing": [...], "added": [...],
+         "unchanged": int, "lines": [human-readable per-finding strings]}
+    """
+    if not 0 <= rtol:
+        raise ValueError(f"rtol must be >= 0, got {rtol}")
+    old_rows = {_row_key(r): r for r in old["rows"]}
+    new_rows = {_row_key(r): r for r in new["rows"]}
+    rep: Dict[str, Any] = {"regressions": [], "improvements": [],
+                           "tau_changes": [], "missing": [], "added": [],
+                           "unchanged": 0, "lines": []}
+
+    def name(k):
+        return f"{k[0]}/{k[1]}/W={k[2]}"
+
+    for key in sorted(old_rows):
+        if key not in new_rows:
+            rep["missing"].append(name(key))
+            rep["lines"].append(f"MISSING  {name(key)}: row dropped from "
+                                f"new artifact")
+    for key in sorted(new_rows):
+        if key not in old_rows:
+            rep["added"].append(name(key))
+            rep["lines"].append(f"new      {name(key)}: "
+                                f"{new_rows[key]['us_per_call']:.1f}us")
+    for key in sorted(set(old_rows) & set(new_rows)):
+        o, n = old_rows[key], new_rows[key]
+        if o["tau"] != n["tau"]:
+            rep["tau_changes"].append(name(key))
+            rep["lines"].append(f"TAU      {name(key)}: {o['tau']} -> "
+                               f"{n['tau']} (semantics changed)")
+            continue
+        ratio = n["us_per_call"] / o["us_per_call"]
+        delta = n["us_per_call"] - o["us_per_call"]
+        if ratio > 1.0 + rtol and delta > min_us:
+            rep["regressions"].append(name(key))
+            rep["lines"].append(
+                f"REGRESS  {name(key)}: {o['us_per_call']:.1f}us -> "
+                f"{n['us_per_call']:.1f}us ({ratio:.2f}x, band "
+                f"rtol={rtol} min_us={min_us})")
+        elif ratio < 1.0 - rtol and -delta > min_us:
+            rep["improvements"].append(name(key))
+            rep["lines"].append(
+                f"improve  {name(key)}: {o['us_per_call']:.1f}us -> "
+                f"{n['us_per_call']:.1f}us ({ratio:.2f}x)")
+        else:
+            rep["unchanged"] += 1
+    rep["ok"] = not (rep["regressions"] or rep["tau_changes"]
+                     or rep["missing"])
+    return rep
+
+
+def _cli_validate(files: Sequence[str]) -> int:
     bad = 0
-    for name in argv[1:]:
+    for name in files:
         try:
             doc = load_bench(name)
         except (ValueError, OSError, json.JSONDecodeError) as e:
@@ -194,6 +271,47 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
                   f"rows={len(doc['rows'])} scale={doc['scale']} "
                   f"jax={doc['jax_version']}/{doc['platform']}")
     return 1 if bad else 0
+
+
+def _cli_diff(argv: Sequence[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.artifact diff",
+        description="regression-gate two BENCH_*.json artifacts")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="relative tolerance band (default 0.25)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore absolute deltas below this (default 50us)")
+    args = ap.parse_args(list(argv))
+    try:
+        old, new = load_bench(args.old), load_bench(args.new)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 2
+    rep = diff_bench(old, new, rtol=args.rtol, min_us=args.min_us)
+    for line in rep["lines"]:
+        print(line)
+    print(f"diff {args.old} -> {args.new}: "
+          f"{len(rep['regressions'])} regressions, "
+          f"{len(rep['tau_changes'])} tau changes, "
+          f"{len(rep['missing'])} missing, {len(rep['added'])} new, "
+          f"{len(rep['improvements'])} improvements, "
+          f"{rep['unchanged']} within band")
+    return 0 if rep["ok"] else 1
+
+
+def _cli(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "validate" and len(argv) >= 2:
+        return _cli_validate(argv[1:])
+    if argv and argv[0] == "diff" and len(argv) >= 3:
+        return _cli_diff(argv[1:])
+    print("usage: python -m benchmarks.artifact validate FILE...\n"
+          "       python -m benchmarks.artifact diff OLD NEW "
+          "[--rtol R] [--min-us U]", file=sys.stderr)
+    return 2
 
 
 if __name__ == "__main__":

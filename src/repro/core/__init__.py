@@ -1,18 +1,23 @@
 """The paper's core system: state frames, the epoch engine, stopping rules,
-the multi-workload ADS instance layer, and the cross-strategy conformance
-harness."""
+the multi-workload ADS instance layer, the execution-substrate abstraction
+(sequential / vmap / shard_map), and the conformance + substrate-equivalence
+harnesses."""
 
 from .adaptive import AdaptiveResult, run_adaptive
 from .frames import (Collectives, FrameStrategy, StateFrame, accumulate,
                      axis_collectives, combine, sequential_collectives,
-                     shard_frame_pad, zeros_like_frame)
+                     shard_frame_pad, shard_groups, zeros_like_frame)
 from .instances import (AdaptiveInstance, BuiltInstance, available_instances,
                         get_instance, register_instance, run_instance)
+from .substrate import (Substrate, available_substrates, resolve_substrate,
+                        run_on_substrate, worker_mesh)
 
 __all__ = [
     "AdaptiveInstance", "AdaptiveResult", "BuiltInstance", "Collectives",
-    "FrameStrategy", "StateFrame", "accumulate", "available_instances",
-    "axis_collectives", "combine", "get_instance", "register_instance",
-    "run_adaptive", "run_instance", "sequential_collectives",
-    "shard_frame_pad", "zeros_like_frame",
+    "FrameStrategy", "StateFrame", "Substrate", "accumulate",
+    "available_instances", "available_substrates", "axis_collectives",
+    "combine", "get_instance", "register_instance", "resolve_substrate",
+    "run_adaptive", "run_instance", "run_on_substrate",
+    "sequential_collectives", "shard_frame_pad", "shard_groups",
+    "worker_mesh", "zeros_like_frame",
 ]

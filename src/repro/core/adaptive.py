@@ -6,7 +6,8 @@ Algorithm 1/2 (convenience facade over :mod:`repro.core.epoch`).
         check_fn,                 # CHECKFORSTOP(): StateFrame -> (bool, aux)
         template=jnp.zeros(n),    # shape of frame.data
         strategy="local",         # lock|barrier|local|shared|indexed
-        world=8,                  # parallel workers (vmap-virtual or mesh)
+        world=8,                  # parallel workers
+        substrate="shard_map",    # sequential|vmap|shard_map (core/substrate)
         rounds_per_epoch=4,       # paper's N (App. C.2), in rounds
         xi=1.33,                  # App. C.3 cadence heuristic
     )
@@ -21,12 +22,11 @@ import dataclasses
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .epoch import EpochConfig, EpochState, rounds_for_world, run_sharded, \
-    run_virtual, run_worker
-from .frames import FrameStrategy, sequential_collectives
+from .epoch import EpochConfig, EpochState, rounds_for_world
+from .frames import FrameStrategy
+from .substrate import Substrate, resolve_substrate, run_on_substrate
 
 PyTree = Any
 
@@ -43,54 +43,63 @@ class AdaptiveResult:
     state: EpochState
 
 
+def reassemble_shared(x, world: int, frame_shards: int):
+    """Glue the per-worker reduce-scatter shards of one SHARED_FRAME leaf
+    (stacked ``(W, n/F, ...)``) back into the full ``(n, ...)`` vector.
+
+    With F < W the W/F groups hold redundant copies of every shard; shard i
+    is gathered from whichever group owns that copy (round-robin over the
+    groups, so no single group is assumed authoritative) after verifying the
+    redundant copies agree — a cross-group mismatch means the grouped
+    reduction itself diverged and is raised, never silently papered over.
+    """
+    a = np.asarray(x)
+    if a.ndim <= 1:  # per-worker scalar leaf (num) — fully reduced
+        return a[0] if a.ndim == 1 else a
+    F = frame_shards or world
+    groups = world // F
+    shards = a.reshape(groups, F, *a.shape[1:])
+    for g in range(1, groups):
+        if not np.array_equal(shards[g], shards[0]):
+            raise AssertionError(
+                f"SHARED_FRAME redundant groups disagree (group {g} vs 0, "
+                f"W={world}, F={F}) — grouped reduce-scatter diverged")
+    picked = np.stack([shards[i % groups, i] for i in range(F)])
+    return picked.reshape(F * a.shape[1], *a.shape[2:])
+
+
 def run_adaptive(sample_fn, check_fn, template: PyTree, *,
                  strategy: str | FrameStrategy = "local",
                  world: int = 1, seed: int = 0, rounds_per_epoch: int = 4,
                  max_epochs: int = 10_000, xi: float = 0.0,
                  round_batch: int = 1, init_carry: PyTree = None,
+                 substrate: "str | Substrate | None" = None,
                  mesh=None, mesh_axis: Optional[str] = None,
                  frame_shards: int = 0) -> AdaptiveResult:
     strat = FrameStrategy(strategy) if isinstance(strategy, str) else strategy
     if mesh is not None and mesh_axis is not None:
-        world = mesh.shape[mesh_axis]  # outputs are stacked per worker
+        # explicit mesh implies the shard_map substrate on that mesh
+        world = mesh.shape[mesh_axis]
+        substrate = Substrate.SHARD_MAP
     rounds = rounds_for_world(rounds_per_epoch * round_batch, round_batch,
                               world, xi) if xi else rounds_per_epoch
+    sub = resolve_substrate(substrate, world)
     cfg = EpochConfig(strategy=strat, rounds_per_epoch=rounds,
-                      max_epochs=max_epochs, xi=xi)
-    if mesh is not None and mesh_axis is not None:
-        st = run_sharded(sample_fn, check_fn, template, init_carry, seed,
-                         mesh, mesh_axis, cfg, frame_shards=frame_shards)
-    elif world == 1:
-        st = run_worker(sample_fn, check_fn, template, init_carry,
-                        jax.random.key(seed), cfg,
-                        colls=sequential_collectives(),
-                        seed_scalar=jnp.asarray(seed, jnp.uint32),
-                        worker_id=jnp.int32(0))
-    else:
-        st = run_virtual(sample_fn, check_fn, template, init_carry, seed,
-                         world, cfg, frame_shards=frame_shards)
+                      max_epochs=max_epochs, xi=xi, substrate=sub.value)
+    st = run_on_substrate(sample_fn, check_fn, template, init_carry, seed,
+                          world, cfg, substrate=sub,
+                          frame_shards=frame_shards, mesh=mesh,
+                          mesh_axis=mesh_axis)
 
-    # run_virtual/run_sharded stack outputs per worker (even for W=1 meshes);
-    # only the W=1 run_worker path returns unstacked leaves.
-    stacked = (mesh is not None and mesh_axis is not None) or world > 1
-
+    # Every substrate returns per-worker-stacked leaves (leading dim W).
     def first(x):
         a = np.asarray(x)
-        return a[0] if (stacked and a.ndim >= 1 and a.shape[0] == world) \
-            else a
+        return a[0] if (a.ndim >= 1 and a.shape[0] == world) else a
 
-    if strat == FrameStrategy.SHARED_FRAME and stacked:
-        # Reassemble the reduce-scattered total: worker i holds shard i of
-        # ⊕ Δ (with F < W, group 0 — workers 0..F−1 — holds one full copy).
-        F = frame_shards or world
-
-        def reassemble(x):
-            a = np.asarray(x)
-            if a.ndim <= 1:  # per-worker scalar leaf — fully reduced
-                return a[0] if a.ndim == 1 else a
-            return a[:F].reshape(F * a.shape[1], *a.shape[2:])
-
-        data = jax.tree.map(reassemble, st.total.data)
+    if strat == FrameStrategy.SHARED_FRAME:
+        data = jax.tree.map(
+            lambda x: reassemble_shared(x, world, frame_shards),
+            st.total.data)
     else:
         data = jax.tree.map(first, st.total.data)
     return AdaptiveResult(

@@ -76,13 +76,20 @@ def set_mesh(mesh):
     return mesh
 
 
-def make_mesh(shape, axes, *, auto_axis_types: bool = True):
-    """``jax.make_mesh`` forwarding ``axis_types`` only when supported."""
+def make_mesh(shape, axes, *, auto_axis_types: bool = True, devices=None):
+    """``jax.make_mesh`` forwarding ``axis_types`` only when supported.
+
+    ``devices`` — explicit device list (e.g. ``jax.devices()[:W]`` for a
+    worker mesh smaller than the host's device count); every supported JAX
+    accepts it, so it is forwarded unconditionally when given.
+    """
+    kwargs = {} if devices is None else {"devices": tuple(devices)}
     try:
         from jax.sharding import AxisType  # JAX ≥ 0.5
     except ImportError:
-        return jax.make_mesh(tuple(shape), tuple(axes))
+        return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
     if not auto_axis_types:
-        return jax.make_mesh(tuple(shape), tuple(axes))
+        return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(tuple(axes)))
+                         axis_types=(AxisType.Auto,) * len(tuple(axes)),
+                         **kwargs)

@@ -27,6 +27,13 @@ Cross-cell invariants:
 5. **SHARED_FRAME reassembly** (§3.2) — the reduce-scattered shards, glued
    back together, equal the replicated LOCAL_FRAME total at the same
    (seed, W) — hardware reduce-scatter ≡ fetch-add.
+
+Substrate equivalence (:func:`run_substrate_equivalence`): every
+(strategy × W × F) cell must produce **bit-identical** τ, trimmed data, and
+estimate under the sequential / vmap / shard_map execution substrates
+(:mod:`repro.core.substrate`), so collectives changes — in particular the
+grouped F < W reduce-scatter that only exists under shard_map — can never
+silently diverge from the simulated semantics the rest of the suite runs on.
 """
 
 from __future__ import annotations
@@ -39,8 +46,10 @@ import numpy as np
 
 from .frames import FrameStrategy
 from .instances import AdaptiveInstance, get_instance, run_instance
+from .substrate import Substrate, unavailable_reason
 
 DEFAULT_WORLDS = (1, 2, 4)
+EQUIVALENCE_WORLDS = (1, 2, 4, 8)
 
 
 @dataclasses.dataclass
@@ -181,8 +190,149 @@ def run_conformance(instance: "str | AdaptiveInstance", *,
 def run_all(*, strategies: Optional[Sequence[FrameStrategy]] = None,
             worlds: Sequence[int] = DEFAULT_WORLDS,
             seed: int = 0) -> Dict[str, ConformanceReport]:
-    """Conformance across every registered instance."""
+    """Conformance across every registered instance.
+
+    ``seed`` flows into every cell *and* the W=1 sequential reference run of
+    each per-instance sweep, so a multi-seed certification is simply
+    ``{s: run_all(seed=s) for s in seeds}`` — no cell ever silently runs at
+    a default seed.
+    """
     from .instances import available_instances
     return {name: run_conformance(name, strategies=strategies, worlds=worlds,
                                   seed=seed)
             for name in available_instances()}
+
+
+# ---------------------------------------------------------------------------
+# Substrate equivalence: sequential / vmap / shard_map must agree bit-for-bit.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SubstrateCell:
+    """One (strategy, W, F) cell compared across execution substrates."""
+
+    instance: str
+    strategy: FrameStrategy
+    world: int
+    frame_shards: int             # paper's F (0 → W)
+    num: int                      # reference (vmap) τ
+    ran: List[str]                # substrate values that executed
+    skipped: Dict[str, str]       # substrate value -> why it could not run
+    failures: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    @property
+    def compared(self) -> int:
+        """How many substrates were actually cross-checked against vmap."""
+        return max(0, len(self.ran) - 1)
+
+
+@dataclasses.dataclass
+class SubstrateReport:
+    instance: str
+    cells: List[SubstrateCell]
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.cells)
+
+    @property
+    def failures(self) -> List[str]:
+        return [f for c in self.cells for f in c.failures]
+
+    def summary(self) -> str:
+        lines = [f"substrate-equivalence[{self.instance}]: "
+                 f"{sum(c.ok for c in self.cells)}/{len(self.cells)} cells ok"]
+        for c in self.cells:
+            tag = "ok " if c.ok else "FAIL"
+            F = c.frame_shards or c.world
+            lines.append(
+                f"  {tag} {c.strategy.name:13s} W={c.world} F={F} "
+                f"τ={c.num:6d} ran={','.join(c.ran)}"
+                + (f" skipped={sorted(c.skipped)}" if c.skipped else "")
+                + ("" if c.ok else f"  <- {'; '.join(c.failures)}"))
+        return "\n".join(lines)
+
+
+def equivalence_grid(worlds: Sequence[int] = EQUIVALENCE_WORLDS,
+                     strategies: Optional[Sequence[FrameStrategy]] = None,
+                     ) -> List[Tuple[FrameStrategy, int, int]]:
+    """The (strategy, W, F) cells of the substrate-equivalence suite: the
+    full strategy × W grid at F = W, plus the SHARED_FRAME F = W/2 cells
+    that exercise the grouped reduce-scatter + cross-group all-reduce."""
+    strategies = list(strategies) if strategies is not None \
+        else list(FrameStrategy)
+    cells = [(s, w, 0) for s in strategies for w in worlds]
+    if FrameStrategy.SHARED_FRAME in strategies:
+        cells += [(FrameStrategy.SHARED_FRAME, w, w // 2)
+                  for w in worlds if w >= 2]
+    return cells
+
+
+def run_substrate_equivalence(
+        instance: "str | AdaptiveInstance", *,
+        strategies: Optional[Sequence[FrameStrategy]] = None,
+        worlds: Sequence[int] = EQUIVALENCE_WORLDS,
+        substrates: Optional[Sequence[Substrate]] = None,
+        seed: int = 0,
+        require_all: bool = False) -> SubstrateReport:
+    """Run one instance's (strategy × W × F) grid on every substrate that can
+    execute here and demand bit-identical τ, trimmed data, and estimate.
+
+    vmap is the reference substrate (always available; it is what the rest of
+    the test suite certifies).  The sequential oracle joins at W=1; shard_map
+    joins wherever ``len(jax.devices()) ≥ W``.  A substrate that cannot run
+    is recorded in ``cell.skipped`` — or failed outright with
+    ``require_all=True`` (the CI substrate job sets it so a mis-provisioned
+    runner cannot silently skip the whole point of the suite).
+    """
+    inst = get_instance(instance) if isinstance(instance, str) else instance
+    subs = list(substrates) if substrates is not None else list(Substrate)
+
+    cells: List[SubstrateCell] = []
+    for strat, world, F in equivalence_grid(worlds, strategies):
+        runs: Dict[str, Tuple[int, object, np.ndarray]] = {}
+        skipped: Dict[str, str] = {}
+        failures: List[str] = []
+        where = f"{inst.name}/{strat.name}/W={world}/F={F or world}"
+        for sub in subs:
+            reason = unavailable_reason(sub, world)
+            if reason is not None:
+                skipped[sub.value] = reason
+                if require_all and sub != Substrate.SEQUENTIAL:
+                    failures.append(f"{where}: required substrate "
+                                    f"{sub.value} unavailable: {reason}")
+                continue
+            est, res, built = run_instance(
+                inst, strategy=strat, world=world, seed=seed,
+                substrate=sub.value, frame_shards=F)
+            runs[sub.value] = (res.num, built.trim(res.data), est)
+
+        ref_key = Substrate.VMAP.value
+        if ref_key not in runs:
+            failures.append(f"{where}: reference substrate {ref_key} did "
+                            f"not run")
+            num0 = -1
+        else:
+            num0, data0, est0 = runs[ref_key]
+            for key, (num, data, est) in runs.items():
+                if key == ref_key:
+                    continue
+                if num != num0:
+                    failures.append(f"{where}: τ differs — {key}={num}, "
+                                    f"{ref_key}={num0}")
+                if not _tree_equal(data, data0):
+                    failures.append(f"{where}: trimmed data differs — "
+                                    f"{key} vs {ref_key}")
+                if not np.array_equal(est, est0):
+                    failures.append(f"{where}: estimate differs — "
+                                    f"{key} vs {ref_key}")
+
+        cells.append(SubstrateCell(
+            instance=inst.name, strategy=strat, world=world, frame_shards=F,
+            num=num0, ran=sorted(runs), skipped=skipped, failures=failures))
+    return SubstrateReport(instance=inst.name, cells=cells)

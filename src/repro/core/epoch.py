@@ -66,6 +66,10 @@ class EpochConfig:
     # App. C.3 heuristic: coordinator cadence N₀ = N / W^ξ. Applied via
     # :func:`rounds_for_world` when building per-run configs.
     xi: float = 0.0
+    # Execution substrate (core/substrate.py): "sequential" | "vmap" |
+    # "shard_map" (or the Substrate enum); None → sequential at W=1, vmap
+    # otherwise.  Consumed by substrate.run_on_substrate, not run_worker.
+    substrate: "str | None" = None
 
 
 def rounds_for_world(n_samples_between_checks: int, round_batch: int,
@@ -325,13 +329,18 @@ def run_sharded(sample_fn: SampleFn, check_fn: CheckFn, template: PyTree,
     indices for INDEXED_FRAME).  Outputs are stacked per worker along a new
     leading axis of size W (scalars become ``(W,)``; replicated quantities
     like ``total``/``stop`` repeat identically — callers index ``[0]``).
+
+    Collectives are built with ``grouped=True``: the SHARED_FRAME F < W path
+    runs the paper's grouped reduce-scatter + cross-group all-reduce via
+    ``axis_index_groups`` (real collectives, no psum+slice fallback).
     """
     from jax.sharding import PartitionSpec as P
     from .compat import shard_map
     from .frames import axis_collectives
 
     world = mesh.shape[axis]
-    colls = axis_collectives(axis, world, frame_shards=frame_shards)
+    colls = axis_collectives(axis, world, frame_shards=frame_shards,
+                             grouped=True)
 
     def per_worker(keys, wids):
         st = run_worker(sample_fn, check_fn, template, init_carry,

@@ -126,8 +126,27 @@ def sequential_collectives() -> Collectives:
                        scatter_frames=ident, world=1)
 
 
+def shard_groups(world: int, frame_shards: int) -> tuple:
+    """The two ``axis_index_groups`` of the paper's grouped SHARED_FRAME
+    reduction (§3.2, Fig. 3b) for F = ``frame_shards`` < W = ``world``.
+
+    ``within``  — world/F groups of F consecutive workers; the reduce-scatter
+                  runs inside each, leaving worker g·F+i with shard i of the
+                  *group* sum.
+    ``across``  — F groups of world/F workers that hold the same shard index;
+                  the all-reduce across each sums the n/F group partials into
+                  the global shard.
+    """
+    F = frame_shards
+    assert 1 <= F <= world and world % F == 0, (world, F)
+    within = [[g * F + i for i in range(F)] for g in range(world // F)]
+    across = [[g * F + i for g in range(world // F)] for i in range(F)]
+    return within, across
+
+
 def axis_collectives(axis_name: str, world: int,
-                     frame_shards: int = 0) -> Collectives:
+                     frame_shards: int = 0, *,
+                     grouped: bool = False) -> Collectives:
     """Collectives over a named mapped axis (vmap(axis_name=...) or shard_map).
 
     Under ``shard_map`` on a mesh axis these lower to real all-reduce /
@@ -140,6 +159,19 @@ def axis_collectives(axis_name: str, world: int,
     groups: reduce-scatter *within* a group of F, then an all-reduce *across*
     the groups of the per-shard partials — memory n/F per worker, bandwidth
     split between the two phases, mirroring the paper's F trade-off.
+
+    ``grouped`` selects the implementation of the F < world case:
+
+    * ``False`` (vmap / virtual workers) — reference psum+slice.  vmap does
+      not support ``axis_index_groups``, so the full sum is materialized and
+      each worker slices its shard; semantically identical, memory Θ(n).
+    * ``True`` (shard_map on a real mesh axis) — the paper's true grouped
+      form: ``psum_scatter`` *within* each group of F via
+      ``axis_index_groups``, then a cross-group ``psum`` of the n/F partials.
+      No worker ever materializes the full sum.
+
+    Both forms leave worker g·F+i holding shard i of the GLOBAL sum, so
+    results are bit-identical for the integer frames the engine uses.
     """
 
     def reduce_frames(f: StateFrame) -> StateFrame:
@@ -154,6 +186,7 @@ def axis_collectives(axis_name: str, world: int,
 
     F = frame_shards or world
     assert world % F == 0 and F <= world, (world, F)
+    within, across = shard_groups(world, F) if F < world else (None, None)
 
     def scatter_frames(f: StateFrame) -> StateFrame:
         # reduce-scatter: each worker keeps its 1/F shard of the sum.
@@ -165,11 +198,17 @@ def axis_collectives(axis_name: str, world: int,
             if F == world:
                 return jax.lax.psum_scatter(x, axis_name=axis_name,
                                             tiled=True)
-            # F < W (paper's Fig. 3b): worker g·F+i holds shard i of the
-            # GLOBAL sum (groups hold redundant copies).  Reference form:
-            # psum then slice (axis_index_groups is unsupported under vmap;
-            # a shard_map deployment replaces this with grouped
-            # reduce-scatter + cross-group all-reduce of n/F partials).
+            if grouped:
+                # F < W, true grouped form (shard_map): reduce-scatter the
+                # group of F, then all-reduce the n/F partials across the
+                # world/F groups.  Peak per-worker memory stays Θ(n/F).
+                part = jax.lax.psum_scatter(x, axis_name=axis_name,
+                                            tiled=True,
+                                            axis_index_groups=within)
+                return jax.lax.psum(part, axis_name=axis_name,
+                                    axis_index_groups=across)
+            # F < W reference form (vmap: axis_index_groups unsupported):
+            # psum then slice — worker g·F+i holds shard i of the global sum.
             total = jax.lax.psum(x, axis_name=axis_name)
             wid = jax.lax.axis_index(axis_name)
             shard_len = x.shape[0] // F

@@ -113,8 +113,16 @@ def available_instances() -> Tuple[str, ...]:
 def run_instance(instance: "str | AdaptiveInstance", *,
                  strategy: "str | FrameStrategy" = FrameStrategy.LOCAL_FRAME,
                  world: int = 1, seed: int = 0,
+                 substrate: "str | None" = None, frame_shards: int = 0,
                  ) -> Tuple[np.ndarray, AdaptiveResult, BuiltInstance]:
-    """Build + run one registered workload; returns (estimate, result, built)."""
+    """Build + run one registered workload; returns (estimate, result, built).
+
+    ``substrate`` selects the execution substrate (core/substrate.py:
+    ``"sequential"`` | ``"vmap"`` | ``"shard_map"``; None → sequential at
+    W=1, vmap otherwise).  ``frame_shards`` is the paper's F for
+    SHARED_FRAME (0 → F=W); frames are padded to W, which every F | W
+    divides, so any registered instance runs at any valid (W, F).
+    """
     inst = get_instance(instance) if isinstance(instance, str) else instance
     strat = FrameStrategy(strategy) if isinstance(strategy, str) else strategy
     built = inst.build(world=world, strategy=strat)
@@ -122,7 +130,8 @@ def run_instance(instance: "str | AdaptiveInstance", *,
                        strategy=strat, world=world, seed=seed,
                        rounds_per_epoch=built.rounds_per_epoch,
                        max_epochs=built.max_epochs,
-                       init_carry=built.init_carry)
+                       init_carry=built.init_carry,
+                       substrate=substrate, frame_shards=frame_shards)
     est = built.estimate(built.trim(res.data), float(res.num))
     return est, res, built
 

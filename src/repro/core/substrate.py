@@ -1,0 +1,138 @@
+"""Execution substrates — *where* the epoch engine's W workers run.
+
+The engine (:func:`repro.core.epoch.run_worker`) is written against the
+:class:`~repro.core.frames.Collectives` abstraction, so the same per-worker
+program admits three executions:
+
+SEQUENTIAL   W = 1, identity collectives — the correctness oracle.
+VMAP         W virtual workers on one device via ``vmap(axis_name=...)``;
+             collectives are simulated (psum = sum over the mapped axis).
+             This is how tests and the paper-figure benchmarks run on CPU.
+SHARD_MAP    W real devices on a mesh axis via ``shard_map`` (through the
+             :mod:`repro.core.compat` resolver); collectives lower to real
+             all-reduce / reduce-scatter / all-gather, and the SHARED_FRAME
+             F < W path uses the paper's grouped reduce-scatter +
+             cross-group all-reduce (``axis_index_groups``) instead of the
+             vmap psum+slice reference form.
+
+The invariant the substrate-equivalence harness
+(:func:`repro.core.conformance.run_substrate_equivalence`) enforces: for any
+(instance, strategy, W, F) the three substrates produce **bit-identical**
+``total.num`` and trimmed frame data.  Frames are integer pytrees, so real
+collectives cannot diverge from the simulated semantics by reduction order.
+
+On a single-device host, run tests with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before the first
+jax import) to give SHARD_MAP real devices — exactly what the CI
+``substrate-shardmap`` job does.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any, Optional
+
+import jax
+
+PyTree = Any
+
+WORKER_AXIS = "workers"
+
+
+class Substrate(enum.Enum):
+    """How the engine's W workers are executed (see module docstring)."""
+
+    SEQUENTIAL = "sequential"
+    VMAP = "vmap"
+    SHARD_MAP = "shard_map"
+
+
+def resolve_substrate(substrate: "Substrate | str | None",
+                      world: int = 1) -> Substrate:
+    """Normalize a substrate spec; ``None`` → the historical default
+    (sequential at W=1, vmap otherwise)."""
+    if substrate is None:
+        return Substrate.SEQUENTIAL if world == 1 else Substrate.VMAP
+    return Substrate(substrate) if isinstance(substrate, str) else substrate
+
+
+def unavailable_reason(substrate: "Substrate | str",
+                       world: int) -> Optional[str]:
+    """Why ``substrate`` cannot run ``world`` workers here (None = it can)."""
+    sub = resolve_substrate(substrate, world)
+    if sub == Substrate.SEQUENTIAL and world != 1:
+        return f"sequential substrate is the W=1 oracle (got W={world})"
+    if sub == Substrate.SHARD_MAP:
+        have = len(jax.devices())
+        if have < world:
+            return (f"shard_map needs ≥{world} devices, have {have} — set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{world} before importing jax")
+    return None
+
+
+def available_substrates(world: int) -> tuple:
+    """The substrates that can execute ``world`` workers on this host."""
+    return tuple(s for s in Substrate
+                 if unavailable_reason(s, world) is None)
+
+
+def worker_mesh(world: int, axis: str = WORKER_AXIS):
+    """A 1-D mesh of ``world`` devices for the engine's worker axis."""
+    from .compat import make_mesh
+    reason = unavailable_reason(Substrate.SHARD_MAP, world)
+    if reason is not None:
+        raise RuntimeError(reason)
+    return make_mesh((world,), (axis,), devices=jax.devices()[:world])
+
+
+def run_on_substrate(sample_fn, check_fn, template: PyTree,
+                     init_carry: PyTree, seed: int, world: int, cfg,
+                     *, substrate: "Substrate | str | None" = None,
+                     frame_shards: int = 0, mesh=None,
+                     mesh_axis: Optional[str] = None):
+    """Run the epoch engine on the chosen substrate.
+
+    Returns an :class:`~repro.core.epoch.EpochState` whose leaves are stacked
+    per worker along a new leading axis of size ``world`` on **every**
+    substrate (sequential results gain a leading axis of 1), so callers can
+    treat the three substrates uniformly.
+
+    ``substrate=None`` defers to ``cfg.substrate``, then to the historical
+    default (sequential at W=1, vmap otherwise).  The per-worker RNG streams
+    (``jax.random.split(key(seed), world)``) and the INDEXED_FRAME frame
+    indices are substrate-independent by construction — that is what makes
+    bit-identity across substrates possible at all.
+    """
+    from .epoch import run_sharded, run_virtual, run_worker
+    from .frames import sequential_collectives
+
+    import jax.numpy as jnp
+
+    sub = resolve_substrate(
+        substrate if substrate is not None
+        else getattr(cfg, "substrate", None), world)
+    reason = unavailable_reason(sub, world)
+    if reason is not None:
+        raise RuntimeError(f"substrate {sub.value!r}: {reason}")
+
+    if sub == Substrate.VMAP:
+        return run_virtual(sample_fn, check_fn, template, init_carry, seed,
+                           world, cfg, frame_shards=frame_shards)
+    if sub == Substrate.SHARD_MAP:
+        mesh = mesh if mesh is not None else worker_mesh(world)
+        axis = mesh_axis if mesh_axis is not None else mesh.axis_names[0]
+        if mesh.shape[axis] != world:
+            raise ValueError(
+                f"mesh axis {axis!r} has size {mesh.shape[axis]}, "
+                f"expected world={world}")
+        return run_sharded(sample_fn, check_fn, template, init_carry, seed,
+                           mesh, axis, cfg, frame_shards=frame_shards)
+    # SEQUENTIAL: same key derivation as the mapped substrates (split once,
+    # take worker 0) so W=1 results are bit-identical across substrates.
+    key = jax.random.split(jax.random.key(seed), 1)[0]
+    st = run_worker(sample_fn, check_fn, template, init_carry, key, cfg,
+                    colls=sequential_collectives(),
+                    seed_scalar=jnp.asarray(seed, jnp.uint32),
+                    worker_id=jnp.int32(0))
+    return jax.tree.map(lambda x: jnp.asarray(x)[None], st)

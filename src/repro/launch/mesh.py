@@ -9,6 +9,7 @@ import; tests and benches see the real single device.
 from __future__ import annotations
 
 from ..core.compat import make_mesh as _compat_make_mesh
+from ..core.substrate import WORKER_AXIS, worker_mesh as _worker_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,6 +21,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small ones, e.g. (2,2))."""
     return _compat_make_mesh(shape, axes)
+
+
+def make_worker_mesh(world: int, axis: str = WORKER_AXIS):
+    """1-D mesh of ``world`` devices for the epoch engine's shard_map
+    substrate (raises with the XLA_FLAGS hint when the host has fewer
+    devices — see core/substrate.py)."""
+    return _worker_mesh(world, axis)
 
 
 def dp_axes(mesh) -> tuple:

@@ -10,8 +10,9 @@ import pytest
 # benchmarks/ is a sibling of tests/ — importable from the repo root
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.artifact import (SCHEMA_VERSION, attach_speedups,  # noqa: E402
-                                 load_bench, validate_bench, write_bench)
+from benchmarks.artifact import (SCHEMA_VERSION, _cli, attach_speedups,  # noqa: E402
+                                 diff_bench, load_bench, validate_bench,
+                                 write_bench)
 from benchmarks.perf_summary import summarize  # noqa: E402
 
 
@@ -79,3 +80,80 @@ def test_perf_summary_output(tmp_path):
     out = summarize(load_bench(path))
     assert "suite=instances" in out
     assert "best[wrs]: local W=1 at 2.00x" in out
+
+
+# ------------------------------------------------------------ artifact diff
+
+def _doc(rows):
+    return {"schema_version": SCHEMA_VERSION, "suite": "instances",
+            "jax_version": "0.4.37", "platform": "cpu",
+            "created_unix": 0.0, "scale": "conformance",
+            "rows": attach_speedups([dict(r) for r in rows])}
+
+
+def test_diff_identical_passes():
+    rep = diff_bench(_doc(_rows()), _doc(_rows()))
+    assert rep["ok"]
+    assert not rep["regressions"] and not rep["missing"]
+    assert rep["unchanged"] == 3
+
+
+def test_diff_within_band_passes():
+    new = _rows()
+    new[0]["us_per_call"] *= 1.10          # +10% < rtol=0.25 band
+    new[1]["us_per_call"] += 20.0          # +40% but < min_us floor
+    rep = diff_bench(_doc(_rows()), _doc(new), rtol=0.25, min_us=50.0)
+    assert rep["ok"], rep["lines"]
+    assert rep["unchanged"] == 3
+
+
+def test_diff_flags_regression_beyond_band():
+    new = _rows()
+    new[0]["us_per_call"] = 300.0          # 3.0x and +200us: out of band
+    rep = diff_bench(_doc(_rows()), _doc(new), rtol=0.25, min_us=50.0)
+    assert not rep["ok"]
+    assert rep["regressions"] == ["wrs/barrier/W=1"]
+    assert any("REGRESS" in ln and "3.00x" in ln for ln in rep["lines"])
+
+
+def test_diff_flags_improvement_without_failing():
+    new = _rows()
+    new[0]["us_per_call"] = 10.0
+    rep = diff_bench(_doc(_rows()), _doc(new))
+    assert rep["ok"]
+    assert rep["improvements"] == ["wrs/barrier/W=1"]
+
+
+def test_diff_missing_key_fails_added_does_not():
+    old, new = _rows(), _rows()
+    dropped = new.pop(2)                   # diameter row vanishes
+    new.append({"workload": "kadabra", "strategy": "local", "world": 8,
+                "us_per_call": 42.0, "tau": 64})
+    rep = diff_bench(_doc(old), _doc(new))
+    assert not rep["ok"]
+    assert rep["missing"] == [f"{dropped['workload']}/indexed/W=4"]
+    assert rep["added"] == ["kadabra/local/W=8"]
+    # the added row alone must not fail the gate
+    rep2 = diff_bench(_doc(old), _doc(old + [new[-1]]))
+    assert rep2["ok"] and rep2["added"] == ["kadabra/local/W=8"]
+
+
+def test_diff_tau_change_always_fails():
+    new = _rows()
+    new[1]["tau"] = 2048                   # same timing, different semantics
+    rep = diff_bench(_doc(_rows()), _doc(new))
+    assert not rep["ok"]
+    assert rep["tau_changes"] == ["wrs/local/W=1"]
+
+
+def test_diff_cli_exit_codes(tmp_path):
+    old = write_bench("instances", attach_speedups(_rows()),
+                      out_dir=tmp_path / "old")
+    worse = _rows()
+    worse[0]["us_per_call"] = 999.0
+    new = write_bench("instances", attach_speedups(worse),
+                      out_dir=tmp_path / "new")
+    assert _cli(["diff", str(old), str(old)]) == 0
+    assert _cli(["diff", str(old), str(new)]) == 1
+    assert _cli(["diff", str(old)]) == 2          # missing operand
+    assert _cli(["validate", str(old), str(new)]) == 0

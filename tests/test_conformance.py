@@ -16,12 +16,15 @@ from repro.core.instances import available_instances
 
 INSTANCES = ("kadabra", "triangles", "reachability", "wrs", "diameter")
 WORLDS = (1, 2, 4)
+# Seed 0 certifies every cell in the fast tier; the slow tier re-certifies
+# at seeds 1 and 2 so no invariant is blessed at a single lucky seed.
+EXTRA_SEEDS = (1, 2)
 
 
 @functools.lru_cache(maxsize=None)
-def report(name):
-    """One engine sweep per instance, shared by all parametrized asserts."""
-    return run_conformance(name, worlds=WORLDS, seed=0)
+def report(name, seed=0):
+    """One engine sweep per (instance, seed), shared by all asserts."""
+    return run_conformance(name, worlds=WORLDS, seed=seed)
 
 
 def test_builtin_instances_registered():
@@ -60,6 +63,41 @@ def test_indexed_frame_bit_identical_estimates(instance):
     assert len(ests) == len(WORLDS)
     for e in ests[1:]:
         np.testing.assert_array_equal(e, ests[0])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", EXTRA_SEEDS)
+@pytest.mark.parametrize("instance", INSTANCES)
+def test_multi_seed_sweep(instance, seed):
+    """The full per-instance grid (all strategies × W, incl. the cross-cell
+    INDEXED determinism and SHARED reassembly invariants) re-certified at
+    non-default seeds — run_conformance threads the seed into every cell
+    *and* the W=1 sequential reference run."""
+    rep = report(instance, seed)
+    assert rep.ok, rep.summary()
+
+
+def test_run_all_passes_seed_through():
+    """run_all(seed=s) must hand s to every per-instance sweep (a dropped
+    seed would silently re-certify seed 0 three times)."""
+    import repro.core.conformance as conf
+
+    seen = []
+
+    def spy(name, **kw):
+        seen.append((name, kw.get("seed")))
+        return conf.ConformanceReport(instance=name, cells=[],
+                                      cross_failures=[])
+
+    orig = conf.run_conformance
+    conf.run_conformance = spy
+    try:
+        conf.run_all(seed=17, worlds=(1,))
+    finally:
+        conf.run_conformance = orig
+    from repro.core.instances import available_instances
+    assert [n for n, _ in seen] == sorted(available_instances())
+    assert all(s == 17 for _, s in seen)
 
 
 # ------------------------------------------------------------------ algebra

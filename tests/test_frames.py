@@ -7,7 +7,7 @@ from _hyp import given, settings, st
 
 from repro.core.frames import (StateFrame, accumulate,
                                axis_collectives, combine, shard_frame_pad,
-                               zeros_like_frame)
+                               shard_groups, zeros_like_frame)
 
 
 def frame_of(arr):
@@ -53,6 +53,82 @@ def test_shard_frame_pad():
     assert shard_frame_pad(1, 3) == 3
 
 
+# ----------------------------------------------------- frame monoid (∘, 0)
+# Algorithm 1's correctness rests on (frames, ∘) being a commutative monoid
+# with zeros_like_frame as identity.  Property-checked over random *pytrees*
+# (dict/tuple nesting, mixed dtypes) — not just flat vectors.
+
+
+def _tree_frame(rng, n, m, dtype=np.int32):
+    """A frame whose data is a nested pytree with integer leaves."""
+    return StateFrame(
+        num=jnp.int32(int(rng.integers(0, 10))),
+        data={"v": jnp.asarray(rng.integers(-50, 50, size=(n,)), dtype),
+              "nest": (jnp.asarray(rng.integers(-50, 50, size=(m, 2)),
+                                   dtype),
+                       jnp.asarray(rng.integers(-50, 50, size=()), dtype))})
+
+
+def _frames_equal(a: StateFrame, b: StateFrame) -> bool:
+    if int(a.num) != int(b.num):
+        return False
+    la, lb = jax.tree.leaves(a.data), jax.tree.leaves(b.data)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_combine_associative_commutative_over_pytrees(n, m, seed):
+    rng = np.random.default_rng(seed)
+    fa, fb, fc = (_tree_frame(rng, n, m) for _ in range(3))
+    assert _frames_equal(combine(combine(fa, fb), fc),
+                         combine(fa, combine(fb, fc)))
+    assert _frames_equal(combine(fa, fb), combine(fb, fa))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_zeros_like_frame_is_identity(n, m, seed):
+    rng = np.random.default_rng(seed)
+    f = _tree_frame(rng, n, m)
+    zero = zeros_like_frame(f.data)
+    assert int(zero.num) == 0
+    assert _frames_equal(combine(f, zero), f)
+    assert _frames_equal(combine(zero, f), f)
+    # identity preserves dtypes (zeros_like must not promote)
+    for za, xa in zip(jax.tree.leaves(zero.data), jax.tree.leaves(f.data)):
+        assert za.dtype == xa.dtype
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 10_000), st.integers(1, 64))
+def test_shard_frame_pad_divisible_and_minimal(n, world):
+    pad = shard_frame_pad(n, world)
+    assert pad % world == 0          # reduce-scatter needs W | pad
+    assert pad >= n                  # never truncates
+    assert pad - n < world           # minimal: less than one extra shard row
+    if n % world == 0:
+        assert pad == n              # already aligned → untouched
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 4))
+def test_shard_groups_partition_world(f_exp, g_exp):
+    F, groups = 2 ** f_exp, 2 ** g_exp
+    world = F * groups
+    within, across = shard_groups(world, F)
+    # 'within' partitions the workers into world/F groups of F …
+    assert sorted(w for g in within for w in g) == list(range(world))
+    assert all(len(g) == F for g in within)
+    # … 'across' into F groups of world/F, transposed
+    assert sorted(w for g in across for w in g) == list(range(world))
+    assert all(len(g) == world // F for g in across)
+    for i in range(F):
+        assert across[i] == [g[i] for g in within]
+
+
 def test_axis_collectives_vmap_psum_and_scatter():
     colls = axis_collectives("w", 4)
 
@@ -74,3 +150,23 @@ def test_axis_collectives_vmap_psum_and_scatter():
                                np.asarray(xs.sum(0)))
     # gather: every worker sees all deltas
     assert np.asarray(gathered.data).shape == (4, 4, 4)
+
+
+def test_axis_collectives_f_less_than_w_reference_layout():
+    """vmap reference form of the F<W SHARED reduction: worker g·F+i ends
+    up with shard i of the GLOBAL sum (groups hold redundant copies)."""
+    W, F = 4, 2
+    colls = axis_collectives("w", W, frame_shards=F)
+
+    def worker(x):
+        return colls.scatter_frames(StateFrame(num=jnp.int32(1), data=x))
+
+    xs = jnp.arange(W * 8, dtype=jnp.int32).reshape(W, 8)
+    sc = jax.vmap(worker, axis_name="w")(xs)
+    total = np.asarray(xs.sum(0))
+    out = np.asarray(sc.data)
+    assert out.shape == (W, 8 // F)
+    assert np.all(np.asarray(sc.num) == W)
+    for w in range(W):
+        i = w % F
+        np.testing.assert_array_equal(out[w], total[i * 4:(i + 1) * 4])
