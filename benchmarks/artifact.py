@@ -10,6 +10,7 @@ Envelope (one file per benchmark suite)::
     {
       "schema_version": 1,
       "suite": "instances",            # BENCH_<suite>.json
+      "kind": "instances",             # row schema: "instances" | "serve"
       "jax_version": "0.4.37",
       "platform": "cpu",               # jax.default_backend()
       "created_unix": 1753776000.0,
@@ -17,7 +18,11 @@ Envelope (one file per benchmark suite)::
       "rows": [ <row>, ... ]           # non-empty
     }
 
-Row (one measured cell)::
+``kind`` selects the row schema and the diff join key; artifacts written
+before the field existed validate as ``kind="instances"`` (the default), so
+old uploads stay readable and diffable.
+
+Row, ``kind="instances"`` (one measured strategy×W cell)::
 
     {
       "workload": "kadabra",           # registered instance name
@@ -29,16 +34,30 @@ Row (one measured cell)::
     }                                  # 1.0 on BARRIER rows; null if no
                                        # BARRIER row exists for the cell
 
+Row, ``kind="serve"`` (one retired scheduler query)::
+
+    {
+      "query": "q000-kadabra",         # unique query id (the join key)
+      "workload": "kadabra",
+      "strategy": "local",
+      "world": 4,
+      "us_per_call": 250000.0,         # host wall time stepping it, > 0
+      "tau": 4096,                     # final sample count, > 0
+      "epochs": 12,                    # epochs to retirement, ≥ 1
+      "wait_ticks": 3                  # ticks queued before admission, ≥ 0
+    }
+
 Usage::
 
     python -m benchmarks.artifact validate out/BENCH_*.json
     python -m benchmarks.artifact diff OLD.json NEW.json [--rtol 0.25]
 
 ``diff`` is the regression gate: it joins two artifacts on
-(workload, strategy, world), applies a tolerance band (relative ``--rtol``
-plus an absolute ``--min-us`` floor below which CPU timing noise dominates),
-and exits non-zero on regressions, τ changes, or rows that disappeared —
-CI runs it ``continue-on-error`` as a report; locally it is a real gate.
+(workload, strategy, world) — or on the query id for ``kind="serve"`` —
+applies a tolerance band (relative ``--rtol`` plus an absolute ``--min-us``
+floor below which CPU timing noise dominates), and exits non-zero on
+regressions, τ changes, or rows that disappeared — CI runs it
+``continue-on-error`` as a report; locally it is a real gate.
 """
 
 from __future__ import annotations
@@ -70,8 +89,25 @@ _ROW_FIELDS = {
     "speedup_vs_barrier": (int, float, type(None)),
 }
 
+_ROW_FIELDS_SERVE = {
+    "query": str,
+    "workload": str,
+    "strategy": str,
+    "world": int,
+    "us_per_call": (int, float),
+    "tau": int,
+    "epochs": int,
+    "wait_ticks": int,
+}
+
 _STRATEGIES = ("lock", "barrier", "local", "shared", "indexed")
 _SCALES = ("conformance", "bench")
+_KINDS = ("instances", "serve")
+
+
+def doc_kind(doc: Dict[str, Any]) -> str:
+    """Row-schema kind; pre-``kind`` artifacts default to ``instances``."""
+    return doc.get("kind", "instances")
 
 
 def validate_bench(doc: Dict[str, Any]) -> List[str]:
@@ -92,15 +128,22 @@ def validate_bench(doc: Dict[str, Any]) -> List[str]:
                     f"{SCHEMA_VERSION}")
     if doc["scale"] not in _SCALES:
         errs.append(f"scale {doc['scale']!r} not in {_SCALES}")
+    kind = doc_kind(doc)
+    if not isinstance(kind, str) or kind not in _KINDS:
+        errs.append(f"kind {kind!r} not in {_KINDS}")
+        return errs
+    serve = kind == "serve"
+    row_fields = _ROW_FIELDS_SERVE if serve else _ROW_FIELDS
     if not doc["rows"]:
         errs.append("rows is empty")
     barrier_us: Dict[tuple, float] = {}
+    seen_queries: Dict[str, int] = {}
     for i, row in enumerate(doc["rows"]):
         where = f"rows[{i}]"
         if not isinstance(row, dict):
             errs.append(f"{where}: not an object")
             continue
-        for key, typ in _ROW_FIELDS.items():
+        for key, typ in row_fields.items():
             if key not in row:
                 errs.append(f"{where}: missing field {key!r}")
             elif not isinstance(row[key], typ) or isinstance(row[key], bool):
@@ -116,11 +159,23 @@ def validate_bench(doc: Dict[str, Any]) -> List[str]:
             errs.append(f"{where}: us_per_call {row['us_per_call']} <= 0")
         if row["tau"] <= 0:
             errs.append(f"{where}: tau {row['tau']} <= 0")
+        if serve:
+            if row["epochs"] < 1:
+                errs.append(f"{where}: epochs {row['epochs']} < 1")
+            if row["wait_ticks"] < 0:
+                errs.append(f"{where}: wait_ticks {row['wait_ticks']} < 0")
+            if row["query"] in seen_queries:
+                errs.append(f"{where}: duplicate query id {row['query']!r} "
+                            f"(also rows[{seen_queries[row['query']]}])")
+            seen_queries[row["query"]] = i
+            continue
         sp = row["speedup_vs_barrier"]
         if sp is not None and sp <= 0:
             errs.append(f"{where}: speedup_vs_barrier {sp} <= 0")
         if row["strategy"] == "barrier":
             barrier_us[(row["workload"], row["world"])] = row["us_per_call"]
+    if serve:
+        return errs
     # cells with a BARRIER baseline must carry a speedup (and vice versa)
     for i, row in enumerate(doc["rows"]):
         if not isinstance(row, dict) or "workload" not in row:
@@ -149,13 +204,15 @@ def attach_speedups(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
 
 def write_bench(suite: str, rows: Sequence[Dict[str, Any]], *,
                 out_dir: "str | Path" = "bench-artifacts",
-                scale: str = "conformance") -> Path:
+                scale: str = "conformance",
+                kind: str = "instances") -> Path:
     """Validate and write ``BENCH_<suite>.json``; returns the path."""
     import jax
 
     doc = {
         "schema_version": SCHEMA_VERSION,
         "suite": suite,
+        "kind": kind,
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
         "created_unix": time.time(),
@@ -187,7 +244,9 @@ def load_bench(path: "str | Path") -> Dict[str, Any]:
 # Artifact diff — the regression gate between two BENCH_*.json files.
 # ---------------------------------------------------------------------------
 
-def _row_key(row: Dict[str, Any]) -> tuple:
+def _row_key(row: Dict[str, Any], kind: str = "instances") -> tuple:
+    if kind == "serve":
+        return (row["query"],)
     return (row["workload"], row["strategy"], row["world"])
 
 
@@ -195,14 +254,16 @@ def diff_bench(old: Dict[str, Any], new: Dict[str, Any], *,
                rtol: float = 0.25, min_us: float = 50.0) -> Dict[str, Any]:
     """Compare two validated artifacts row-by-row with tolerance bands.
 
-    A cell regresses when its ``us_per_call`` grows by more than ``rtol``
-    relative *and* more than ``min_us`` absolute (conformance-scale CPU
-    numbers are compile-dominated; sub-``min_us`` jitter is not signal).
-    τ differences are always failures — the adaptive loop stopped at a
-    different sample count, i.e. the semantics changed, so the timing
-    comparison is void.  Rows present in ``old`` but missing from ``new``
-    fail too (a silently dropped cell is not a pass); rows new in ``new``
-    are reported but never fail.
+    Rows join on (workload, strategy, world) for ``kind="instances"`` and
+    on the query id for ``kind="serve"`` (both artifacts must be the same
+    kind).  A cell regresses when its ``us_per_call`` grows by more than
+    ``rtol`` relative *and* more than ``min_us`` absolute
+    (conformance-scale CPU numbers are compile-dominated; sub-``min_us``
+    jitter is not signal).  τ differences are always failures — the
+    adaptive loop stopped at a different sample count, i.e. the semantics
+    changed, so the timing comparison is void.  Rows present in ``old`` but
+    missing from ``new`` fail too (a silently dropped cell is not a pass);
+    rows new in ``new`` are reported but never fail.
 
     Returns a report dict::
 
@@ -212,14 +273,18 @@ def diff_bench(old: Dict[str, Any], new: Dict[str, Any], *,
     """
     if not 0 <= rtol:
         raise ValueError(f"rtol must be >= 0, got {rtol}")
-    old_rows = {_row_key(r): r for r in old["rows"]}
-    new_rows = {_row_key(r): r for r in new["rows"]}
+    kind = doc_kind(old)
+    if doc_kind(new) != kind:
+        raise ValueError(f"cannot diff kind={kind!r} against "
+                         f"kind={doc_kind(new)!r}")
+    old_rows = {_row_key(r, kind): r for r in old["rows"]}
+    new_rows = {_row_key(r, kind): r for r in new["rows"]}
     rep: Dict[str, Any] = {"regressions": [], "improvements": [],
                            "tau_changes": [], "missing": [], "added": [],
                            "unchanged": 0, "lines": []}
 
     def name(k):
-        return f"{k[0]}/{k[1]}/W={k[2]}"
+        return k[0] if kind == "serve" else f"{k[0]}/{k[1]}/W={k[2]}"
 
     for key in sorted(old_rows):
         if key not in new_rows:
@@ -267,7 +332,7 @@ def _cli_validate(files: Sequence[str]) -> int:
             print(f"FAIL {name}: {e}", file=sys.stderr)
             bad += 1
         else:
-            print(f"ok   {name}: suite={doc['suite']} "
+            print(f"ok   {name}: suite={doc['suite']} kind={doc_kind(doc)} "
                   f"rows={len(doc['rows'])} scale={doc['scale']} "
                   f"jax={doc['jax_version']}/{doc['platform']}")
     return 1 if bad else 0

@@ -1,0 +1,81 @@
+"""Serving-subsystem throughput/latency sweep: run the epoch-granular
+scheduler (:mod:`repro.serve.scheduler`) over a mixed query stream and emit
+the ``BENCH_serve.json`` perf artifact (``kind="serve"`` schema in
+:mod:`benchmarks.artifact`).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve \\
+        [--max-in-flight 3] [--queries SPEC[,SPEC...]] [--out DIR]
+
+Each SPEC is ``instance:strategy:world[:seed]``; the default stream mixes
+three workloads across strategies and worker counts — small enough for the
+CI ``serve-smoke`` job, heterogeneous enough that continuous batching at
+epoch granularity is actually exercised (queries retire at different
+ticks and queued queries are admitted into freed slots).
+
+Per-query τ is a pure function of (instance, strategy, world, seed), so the
+artifact rows are deterministic modulo wall time — exactly what
+``benchmarks.artifact diff`` needs: τ changes are semantic regressions,
+``us_per_call`` moves inside a tolerance band.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List, Sequence
+
+from benchmarks.artifact import write_bench
+from benchmarks.common import emit
+from repro.serve import EpochScheduler, SessionSpec
+
+DEFAULT_QUERIES = (
+    "reachability:local:2:0",
+    "triangles:barrier:1:1",
+    "wrs:shared:4:2",
+    "reachability:indexed:4:3",
+    "triangles:local:4:4",
+    "wrs:local:2:5",
+)
+
+
+def run(queries: Sequence[str] = DEFAULT_QUERIES, *,
+        max_in_flight: int = 3, substrate: "str | None" = None,
+        out_dir: str = "bench-artifacts") -> str:
+    sched = EpochScheduler(max_in_flight=max_in_flight, substrate=substrate)
+    for q in queries:
+        sched.submit(SessionSpec.parse(q))
+    sched.drain()
+
+    rows: List[dict] = []
+    for qid, r in sorted(sched.results.items()):
+        rows.append({"query": qid, "workload": r.spec.instance,
+                     "strategy": r.spec.strategy, "world": r.spec.world,
+                     "us_per_call": r.wall_s * 1e6, "tau": r.tau,
+                     "epochs": r.epochs, "wait_ticks": r.wait_ticks})
+        emit(f"serve/{qid}", r.wall_s,
+             f"tau={r.tau} epochs={r.epochs} wait={r.wait_ticks}")
+    path = write_bench("serve", rows, out_dir=out_dir, kind="serve")
+    print(f"# wrote {path} ({len(rows)} queries, "
+          f"{sched.tick_count} scheduler ticks, "
+          f"{len(sched.cache)} compiled steppers)")
+    return str(path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", default=",".join(DEFAULT_QUERIES),
+                    help="comma-separated instance:strategy:world[:seed]")
+    ap.add_argument("--max-in-flight", type=int, default=3)
+    ap.add_argument("--substrate", default=None,
+                    help="force a substrate for every query "
+                         "(sequential|vmap|shard_map)")
+    ap.add_argument("--out", default="bench-artifacts",
+                    help="directory for BENCH_serve.json")
+    args = ap.parse_args()
+    run([q for q in args.queries.split(",") if q],
+        max_in_flight=args.max_in_flight, substrate=args.substrate,
+        out_dir=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

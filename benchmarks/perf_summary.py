@@ -30,6 +30,9 @@ def _collect(paths: Sequence[str]) -> List[Path]:
 
 
 def summarize(doc: Dict) -> str:
+    from benchmarks.artifact import doc_kind
+    if doc_kind(doc) == "serve":
+        return summarize_serve(doc)
     lines = [f"## suite={doc['suite']} scale={doc['scale']} "
              f"jax={doc['jax_version']} platform={doc['platform']}",
              f"{'workload':<16} {'strategy':<8} {'W':>2} "
@@ -48,6 +51,31 @@ def summarize(doc: Dict) -> str:
                 best[r["workload"]] = (sp, r["strategy"], r["world"])
     for wl, (sp, strat, w) in sorted(best.items()):
         lines.append(f"# best[{wl}]: {strat} W={w} at {sp:.2f}x vs barrier")
+    return "\n".join(lines)
+
+
+def summarize_serve(doc: Dict) -> str:
+    """Per-query latency table + pool aggregates for ``kind="serve"``."""
+    lines = [f"## suite={doc['suite']} kind=serve scale={doc['scale']} "
+             f"jax={doc['jax_version']} platform={doc['platform']}",
+             f"{'query':<24} {'strategy':<8} {'W':>2} {'epochs':>6} "
+             f"{'tau':>8} {'wait':>5} {'wall_ms':>10}"]
+    total_wall = 0.0
+    total_tau = 0
+    waits = []
+    for r in sorted(doc["rows"], key=lambda r: r["query"]):
+        wall_ms = r["us_per_call"] / 1e3
+        total_wall += wall_ms
+        total_tau += r["tau"]
+        waits.append(r["wait_ticks"])
+        lines.append(f"{r['query']:<24} {r['strategy']:<8} {r['world']:>2} "
+                     f"{r['epochs']:>6} {r['tau']:>8} {r['wait_ticks']:>5} "
+                     f"{wall_ms:>10.1f}")
+    n = len(doc["rows"])
+    lines.append(f"# pool: {n} queries, {total_tau} samples, "
+                 f"{total_wall:.1f}ms stepping wall, "
+                 f"mean wait {sum(waits)/max(n,1):.1f} ticks, "
+                 f"{total_tau/max(total_wall/1e3,1e-9):.0f} samples/s")
     return "\n".join(lines)
 
 

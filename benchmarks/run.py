@@ -13,6 +13,8 @@ Emits ``name,us_per_call,derived`` CSV rows (plus ``#`` commentary lines).
 | tables23_instances   | Tables 2–3 — per-instance absolute times         |
 | bench_instances      | ADS registry sweep — workload × strategy × W;    |
 |                      | writes the BENCH_instances.json perf artifact    |
+| bench_serve          | serving scheduler over a mixed query stream;     |
+|                      | writes the BENCH_serve.json perf artifact        |
 | roofline_table       | §Roofline — 40-cell dry-run aggregate            |
 | bench_adaptive       | §3.1 (ours) — adaptive grad-accum savings        |
 """
@@ -34,6 +36,7 @@ MODULES = [
     "fig3b_fsweep",
     "tables23_instances",
     "bench_instances",
+    "bench_serve",
     "roofline_table",
     "bench_adaptive",
 ]

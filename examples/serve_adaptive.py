@@ -14,7 +14,11 @@ from repro.launch import serve as serve_mod
 
 
 def main() -> None:
-    print("[example] batched greedy generation:")
+    print("[example] adaptive-query pool (epoch-granular scheduler):")
+    serve_mod.main(["--pool", "--queries",
+                    "wrs:local:2,reachability:shared:2:1", "--max-in-flight",
+                    "2"])
+    print("\n[example] batched greedy generation:")
     serve_mod.main(["--arch", "smollm-360m-reduced", "--batch", "4",
                     "--prompt-len", "16", "--gen", "16"])
     print("\n[example] adaptive (ε,δ) metric estimation:")

@@ -1,4 +1,5 @@
-from .manager import CheckpointManager, save_checkpoint, load_checkpoint, latest_step
+from .manager import (CheckpointManager, save_checkpoint, load_checkpoint,
+                      latest_step, read_meta)
 
 __all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
-           "latest_step"]
+           "latest_step", "read_meta"]

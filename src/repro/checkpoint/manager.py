@@ -156,6 +156,15 @@ def load_checkpoint(tree_like: PyTree, directory: str | Path, step: int, *,
     return jax.tree_util.tree_unflatten(treedef, vals), manifest["meta"]
 
 
+def read_meta(directory: str | Path, step: int) -> Dict:
+    """The ``meta`` dict of one complete checkpoint, without loading any
+    array data (cheap spec/cursor peeking before a full restore)."""
+    d = Path(directory) / f"step_{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    assert manifest.get("complete"), f"incomplete checkpoint {d}"
+    return manifest["meta"]
+
+
 def latest_step(directory: str | Path) -> Optional[int]:
     d = Path(directory)
     if not d.exists():

@@ -8,9 +8,9 @@ defaults) or for benchmark-scale measurements.
 
 from __future__ import annotations
 
-from repro.core.instances import (DiameterInstance, KadabraInstance,
-                                  ReachabilityInstance, TrianglesInstance,
-                                  WeightedSamplingInstance)
+from repro.core.instances import (DiameterInstance, GradVarianceInstance,
+                                  KadabraInstance, ReachabilityInstance,
+                                  TrianglesInstance, WeightedSamplingInstance)
 
 # Conformance-sized (the registry defaults — tiny, exact oracles feasible).
 CONFORMANCE = {
@@ -19,6 +19,7 @@ CONFORMANCE = {
     "reachability": ReachabilityInstance(),
     "wrs": WeightedSamplingInstance(),
     "diameter": DiameterInstance(),
+    "gradvar": GradVarianceInstance(),
 }
 
 # Benchmark-sized: big enough that strategy differences show up in wall
@@ -44,4 +45,8 @@ BENCH = {
                                    n_vertices=512, n_edges=2048,
                                    graph_seed=7, gap=2, batch=32,
                                    max_samples=8192, compute_oracle=False),
+    # gradvar oracle is O(n) — always computed.
+    "gradvar-m": GradVarianceInstance(name="gradvar-m", n_examples=1 << 14,
+                                      dim=32, rtol=0.01, batch=1024,
+                                      max_samples=1 << 19),
 }

@@ -3,20 +3,24 @@ the multi-workload ADS instance layer, the execution-substrate abstraction
 (sequential / vmap / shard_map), and the conformance + substrate-equivalence
 harnesses."""
 
-from .adaptive import AdaptiveResult, run_adaptive
+from .adaptive import AdaptiveResult, result_from_state, run_adaptive
+from .epoch import EpochConfig, EpochProgram, EpochState, make_program
 from .frames import (Collectives, FrameStrategy, StateFrame, accumulate,
                      axis_collectives, combine, sequential_collectives,
                      shard_frame_pad, shard_groups, zeros_like_frame)
 from .instances import (AdaptiveInstance, BuiltInstance, available_instances,
                         get_instance, register_instance, run_instance)
-from .substrate import (Substrate, available_substrates, resolve_substrate,
-                        run_on_substrate, worker_mesh)
+from .substrate import (EpochStepper, Substrate, available_substrates,
+                        make_stepper, resolve_substrate, run_on_substrate,
+                        worker_mesh)
 
 __all__ = [
     "AdaptiveInstance", "AdaptiveResult", "BuiltInstance", "Collectives",
+    "EpochConfig", "EpochProgram", "EpochState", "EpochStepper",
     "FrameStrategy", "StateFrame", "Substrate", "accumulate",
     "available_instances", "available_substrates", "axis_collectives",
-    "combine", "get_instance", "register_instance", "resolve_substrate",
+    "combine", "get_instance", "make_program", "make_stepper",
+    "register_instance", "resolve_substrate", "result_from_state",
     "run_adaptive", "run_instance", "run_on_substrate",
     "sequential_collectives", "shard_frame_pad", "shard_groups",
     "worker_mesh", "zeros_like_frame",

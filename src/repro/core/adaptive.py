@@ -90,13 +90,26 @@ def run_adaptive(sample_fn, check_fn, template: PyTree, *,
                           world, cfg, substrate=sub,
                           frame_shards=frame_shards, mesh=mesh,
                           mesh_axis=mesh_axis)
+    return result_from_state(st, strategy=strat, world=world,
+                             frame_shards=frame_shards)
 
-    # Every substrate returns per-worker-stacked leaves (leading dim W).
+
+def result_from_state(st: EpochState, *, strategy: FrameStrategy, world: int,
+                      frame_shards: int = 0) -> AdaptiveResult:
+    """Extract the consistent :class:`AdaptiveResult` from a per-worker
+    stacked :class:`EpochState` (every substrate — and the serving layer's
+    epoch stepper — returns this layout: leading dim ``world`` on each leaf).
+
+    SHARED_FRAME totals are reduce-scattered shards and are glued back into
+    the full vector via :func:`reassemble_shared`; everything else is
+    replicated across workers and worker 0 is taken.
+    """
+
     def first(x):
         a = np.asarray(x)
         return a[0] if (a.ndim >= 1 and a.shape[0] == world) else a
 
-    if strat == FrameStrategy.SHARED_FRAME:
+    if strategy == FrameStrategy.SHARED_FRAME:
         data = jax.tree.map(
             lambda x: reassemble_shared(x, world, frame_shards),
             st.total.data)

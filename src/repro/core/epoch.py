@@ -48,8 +48,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .frames import (Collectives, FrameStrategy, StateFrame, combine,
-                     sequential_collectives, zeros_like_frame)
+from .frames import (Collectives, FrameStrategy, StateFrame, accumulate,
+                     combine, sequential_collectives, zeros_like_frame)
 
 PyTree = Any
 # sample_fn(key, carry) -> (delta: StateFrame, carry')   — one sampling round
@@ -104,29 +104,59 @@ def _sample_epoch(sample_fn: SampleFn, template: PyTree, rounds: int,
     return frame, carry
 
 
-def run_worker(
+class EpochProgram(NamedTuple):
+    """The epoch engine decomposed into single-epoch pieces.
+
+    ``init(key, worker_id)`` builds the primed epoch-0 state; ``body(state,
+    worker_id)`` advances exactly one epoch; ``cond(state)`` is the
+    keep-running predicate.  ``run_worker`` is literally
+    ``while_loop(cond, body, init(...))`` — the serving layer
+    (:mod:`repro.serve`) drives the same ``body`` one epoch at a time from
+    the host, which is what makes sessions checkpointable and schedulable at
+    epoch granularity with *bit-identical* results: the state between epochs
+    is a plain pytree (frame snapshots are values, not memory), so
+    save → restore → step ≡ step.
+    """
+
+    init: Callable[[jax.Array, jax.Array], "EpochState"]
+    body: Callable[["EpochState", jax.Array], "EpochState"]
+    cond: Callable[["EpochState"], jax.Array]
+    cfg: EpochConfig
+    fold: Optional[int]
+
+
+def make_program(
     sample_fn: SampleFn,
     check_fn: CheckFn,
     template: PyTree,
-    init_carry: PyTree,
-    key: jax.Array,
     cfg: EpochConfig,
-    colls: Optional[Collectives] = None,
+    colls: Collectives,
     aux_template: Optional[PyTree] = None,
     seed_scalar: Optional[jax.Array] = None,
-    worker_id: Optional[jax.Array] = None,
-) -> EpochState:
-    """Run the adaptive-sampling loop for one (SPMD) worker.
+    fold: Optional[int] = None,
+) -> EpochProgram:
+    """Build the per-worker epoch program for one strategy.
 
     ``template`` — pytree with the shape/dtype of ``frame.data`` (for SHARED
     strategies this is the *full* frame; the engine keeps the sharded total).
     ``aux_template`` — shape of check aux (obtained via ``jax.eval_shape`` if
-    omitted).
-    ``seed_scalar``/``worker_id`` — required for INDEXED_FRAME.
+    omitted).  ``seed_scalar`` — required for INDEXED_FRAME (the ``init``/
+    ``body`` callables take the worker id as their second argument).
+
+    ``fold = k`` runs **k logical workers per physical worker** (elastic
+    re-sharding, :mod:`repro.serve.elastic`): ``state.key`` carries k stacked
+    PRNG keys and ``state.carry`` k stacked carries, each epoch samples every
+    logical stream and combines the k deltas before the collective.  Because
+    ``∘`` is associative/commutative over integer frames, the global epoch
+    delta — and hence (τ, estimate) — is bit-identical to the unfolded run
+    with W_logical = W_physical · k workers.  Supported for every strategy
+    except INDEXED_FRAME (whose frame indices are already W-independent).
     """
-    colls = colls or sequential_collectives()
     strat = cfg.strategy
     W = colls.world
+    if fold is not None and strat == FrameStrategy.INDEXED_FRAME:
+        raise ValueError("fold is not supported for INDEXED_FRAME (its "
+                         "result is already worker-count independent)")
 
     F = colls.frame_shards or W
     if aux_template is None:
@@ -141,11 +171,20 @@ def run_worker(
     else:
         total0 = zeros_like_frame(template)
 
-    state0 = EpochState(
-        key=key, carry=init_carry, total=total0,
-        pending=zeros_like_frame(template),
-        stop=jnp.zeros((), bool), aux=zero_aux,
-        epoch=jnp.zeros((), jnp.int32), stop_epoch=jnp.zeros((), jnp.int32))
+    def split_keys(key):
+        """Per-epoch key evolution — vmapped over the fold's logical streams
+        so each stream's split sequence is identical to its unfolded run."""
+        if fold is None:
+            return _split(key)
+        return jax.vmap(_split)(key)
+
+    def sample_epoch(k_epoch, carry, rounds):
+        if fold is None:
+            return _sample_epoch(sample_fn, template, rounds, k_epoch, carry)
+        frames, carry = jax.vmap(
+            lambda k, c: _sample_epoch(sample_fn, template, rounds, k, c)
+        )(k_epoch, carry)
+        return accumulate(frames), carry
 
     def check_full(total: StateFrame):
         stop, aux = check_fn(total)
@@ -165,9 +204,9 @@ def run_worker(
     if strat in (FrameStrategy.LOCK, FrameStrategy.BARRIER):
         rounds = 1 if strat == FrameStrategy.LOCK else cfg.rounds_per_epoch
 
-        def body(st: EpochState) -> EpochState:
-            k_epoch, key = _split(st.key)
-            delta, carry = _sample_epoch(sample_fn, template, rounds, k_epoch, st.carry)
+        def body(st: EpochState, worker_id) -> EpochState:
+            k_epoch, key = split_keys(st.key)
+            delta, carry = sample_epoch(k_epoch, st.carry, rounds)
             reduced = colls.reduce_frames(delta)          # blocking barrier
             total = combine(st.total, reduced)
             stop, aux = check_full(total)
@@ -178,16 +217,15 @@ def run_worker(
     # ----- LOCAL_FRAME: lagged all-reduce, overlappable ------------------
     elif strat == FrameStrategy.LOCAL_FRAME:
 
-        def body(st: EpochState) -> EpochState:
+        def body(st: EpochState, worker_id) -> EpochState:
             # (a) fold in the PREVIOUS epoch's deltas — no data dependency on
             # (b), so the all-reduce can overlap the sampling compute.
             reduced = colls.reduce_frames(st.pending)
             total = combine(st.total, reduced)
             stop, aux = check_full(total)
             # (b) sample the current epoch.
-            k_epoch, key = _split(st.key)
-            delta, carry = _sample_epoch(sample_fn, template,
-                                         cfg.rounds_per_epoch, k_epoch, st.carry)
+            k_epoch, key = split_keys(st.key)
+            delta, carry = sample_epoch(k_epoch, st.carry, cfg.rounds_per_epoch)
             e = st.epoch + 1
             return EpochState(key, carry, total, delta, stop, aux, e,
                               jnp.where(stop & ~st.stop, e, st.stop_epoch))
@@ -196,30 +234,28 @@ def run_worker(
     elif strat == FrameStrategy.SHARED_FRAME:
         assert colls.scatter_frames is not None, "SHARED_FRAME needs scatter_frames"
 
-        def body(st: EpochState) -> EpochState:
+        def body(st: EpochState, worker_id) -> EpochState:
             reduced_shard = colls.scatter_frames(st.pending)
             total = combine(st.total, reduced_shard)
             stop, aux = check_sharded(total)
-            k_epoch, key = _split(st.key)
-            delta, carry = _sample_epoch(sample_fn, template,
-                                         cfg.rounds_per_epoch, k_epoch, st.carry)
+            k_epoch, key = split_keys(st.key)
+            delta, carry = sample_epoch(k_epoch, st.carry, cfg.rounds_per_epoch)
             e = st.epoch + 1
             return EpochState(key, carry, total, delta, stop, aux, e,
                               jnp.where(stop & ~st.stop, e, st.stop_epoch))
 
     # ----- INDEXED_FRAME: deterministic prefix checking ------------------
     elif strat == FrameStrategy.INDEXED_FRAME:
-        assert seed_scalar is not None and worker_id is not None, \
-            "INDEXED_FRAME needs seed_scalar and worker_id"
+        assert seed_scalar is not None, "INDEXED_FRAME needs seed_scalar"
         assert colls.all_frames is not None
 
-        def sample_indexed(epoch: jax.Array, carry: PyTree):
+        def sample_indexed(epoch: jax.Array, worker_id, carry: PyTree):
             m = epoch * W + worker_id          # global frame index
             k = jax.random.fold_in(jax.random.key(0), seed_scalar)
             k = jax.random.fold_in(k, m)
             return _sample_epoch(sample_fn, template, cfg.rounds_per_epoch, k, carry)
 
-        def body(st: EpochState) -> EpochState:
+        def body(st: EpochState, worker_id) -> EpochState:
             gathered = colls.all_frames(st.pending)   # (W, ...) per-frame deltas
 
             def prefix_step(acc, j):
@@ -241,7 +277,7 @@ def run_worker(
                 jnp.arange(W))
             if W > 1:  # verdicts agree (same data), keep them in lockstep
                 stop = colls.reduce_scalar(stop.astype(jnp.int32)) >= W
-            delta, carry = sample_indexed(st.epoch, st.carry)
+            delta, carry = sample_indexed(st.epoch, worker_id, st.carry)
             return EpochState(st.key, carry, total, delta, stop, aux,
                               st.epoch + 1, stop_epoch)
 
@@ -253,27 +289,55 @@ def run_worker(
 
     # Epoch 0 produces the first pending frame (there is no SF for epoch 0 —
     # Alg. 2 note on line 9).
-    if strat == FrameStrategy.INDEXED_FRAME:
-        def sample_first(st):
-            m = jnp.zeros((), jnp.int32) * W + worker_id
-            k = jax.random.fold_in(jax.random.key(0), seed_scalar)
-            k = jax.random.fold_in(k, m)
-            delta, carry = _sample_epoch(sample_fn, template, cfg.rounds_per_epoch,
-                                         k, st.carry)
-            return st._replace(pending=delta, carry=carry,
-                               epoch=jnp.ones((), jnp.int32))
-        state0 = sample_first(state0)
-        # NB: body samples frame for st.epoch (already advanced), so indexed
-        # frame indices stay contiguous: 0·W+wid, 1·W+wid, ...
-    elif strat in (FrameStrategy.LOCAL_FRAME, FrameStrategy.SHARED_FRAME):
-        k0, key = _split(state0.key)
-        delta0, carry0 = _sample_epoch(sample_fn, template, cfg.rounds_per_epoch,
-                                       k0, state0.carry)
-        state0 = state0._replace(key=key, carry=carry0, pending=delta0,
-                                 epoch=jnp.ones((), jnp.int32))
+    def init(key: jax.Array, worker_id, carry: PyTree = None) -> EpochState:
+        state0 = EpochState(
+            key=key, carry=carry, total=total0,
+            pending=zeros_like_frame(template),
+            stop=jnp.zeros((), bool), aux=zero_aux,
+            epoch=jnp.zeros((), jnp.int32), stop_epoch=jnp.zeros((), jnp.int32))
+        if strat == FrameStrategy.INDEXED_FRAME:
+            # NB: body samples frame for st.epoch (already advanced), so
+            # indexed frame indices stay contiguous: 0·W+wid, 1·W+wid, ...
+            delta, carry0 = sample_indexed(jnp.zeros((), jnp.int32),
+                                           worker_id, state0.carry)
+            return state0._replace(pending=delta, carry=carry0,
+                                   epoch=jnp.ones((), jnp.int32))
+        if strat in (FrameStrategy.LOCAL_FRAME, FrameStrategy.SHARED_FRAME):
+            k0, key2 = split_keys(state0.key)
+            delta0, carry0 = sample_epoch(k0, state0.carry,
+                                          cfg.rounds_per_epoch)
+            return state0._replace(key=key2, carry=carry0, pending=delta0,
+                                   epoch=jnp.ones((), jnp.int32))
+        return state0
 
-    final = jax.lax.while_loop(cond, body, state0)
-    return final
+    return EpochProgram(init=init, body=body, cond=cond, cfg=cfg, fold=fold)
+
+
+def run_worker(
+    sample_fn: SampleFn,
+    check_fn: CheckFn,
+    template: PyTree,
+    init_carry: PyTree,
+    key: jax.Array,
+    cfg: EpochConfig,
+    colls: Optional[Collectives] = None,
+    aux_template: Optional[PyTree] = None,
+    seed_scalar: Optional[jax.Array] = None,
+    worker_id: Optional[jax.Array] = None,
+) -> EpochState:
+    """Run the adaptive-sampling loop for one (SPMD) worker to completion.
+
+    Convenience wrapper: ``while_loop`` over :func:`make_program`'s pieces.
+    ``seed_scalar``/``worker_id`` — required for INDEXED_FRAME.
+    """
+    colls = colls or sequential_collectives()
+    if cfg.strategy == FrameStrategy.INDEXED_FRAME:
+        assert worker_id is not None, "INDEXED_FRAME needs worker_id"
+    wid = worker_id if worker_id is not None else jnp.zeros((), jnp.int32)
+    prog = make_program(sample_fn, check_fn, template, cfg, colls,
+                        aux_template=aux_template, seed_scalar=seed_scalar)
+    state0 = prog.init(key, wid, init_carry)
+    return jax.lax.while_loop(prog.cond, lambda st: prog.body(st, wid), state0)
 
 
 def _split(key):

@@ -25,6 +25,8 @@ Registered out of the box:
 * ``wrs``           — weighted-mean estimation via alias-table draws
                       (Hübschle-Schneider & Sanders weighted sampling)
 * ``diameter``      — graph-diameter estimation via double-sweep BFS
+* ``gradvar``       — adaptive gradient-variance accumulation (mean
+                      per-example gradient norm to a relative-SEM target)
 
 Adding a workload = implement ``build()`` returning a
 :class:`BuiltInstance` + ``register_instance(...)`` (see README §Instance
@@ -451,8 +453,70 @@ class DiameterInstance:
             max_epochs=self.max_epochs)
 
 
+@dataclasses.dataclass(frozen=True)
+class GradVarianceInstance:
+    """Adaptive gradient-variance accumulation as a serving-capable ADS
+    workload: estimate the mean per-example gradient norm of a fixed
+    linear-regression iterate, stopping once the relative standard error is
+    below ``rtol`` (:class:`~repro.core.stopping.GradVarianceCondition` —
+    the same condition the training-side device loop in
+    ``optim/adaptive.py`` uses).  Norms are integer-quantized (the wrs
+    trick) so frames reduce exactly under every strategy; the oracle is the
+    O(n) population mean, always computed.
+    """
+
+    name: str = "gradvar"
+    n_examples: int = 256
+    dim: int = 8
+    data_seed: int = 5
+    rtol: float = 0.05
+    batch: int = 64
+    rounds_per_epoch: int = 2
+    max_epochs: int = 4000
+    # int32 moment sums stay exact while max_samples·(value_scale−1)² < 2³¹.
+    max_samples: int = 1 << 19
+    value_scale: int = 32
+
+    def _setup(self):
+        def make():
+            from ..optim.adaptive import quantized_grad_norms
+            return quantized_grad_norms(self.n_examples, self.dim,
+                                        self.data_seed, self.value_scale)
+        return _cached(("gradvar", self), make)
+
+    def build(self, *, world: int = 1,
+              strategy: FrameStrategy = FrameStrategy.LOCAL_FRAME
+              ) -> BuiltInstance:
+        from ..core.stopping import GradVarianceCondition
+        from ..optim.adaptive import (gradnorm_frame_template,
+                                      make_gradnorm_sample_fn)
+        gq, mu = self._setup()
+        pad = _pad_for(self.n_examples, world, strategy)
+        sample_fn = make_gradnorm_sample_fn(gq, self.batch, pad_to=pad)
+        cond = GradVarianceCondition(rtol=self.rtol,
+                                     max_samples=self.max_samples)
+        scale = float(self.value_scale)
+
+        def estimate(data: PyTree, num: float) -> np.ndarray:
+            return np.asarray([float(data["s1"]) / (scale * max(num, 1.0))])
+
+        # rel-SEM stopping is a standard-error target, not a (ε,δ) bound:
+        # the estimate sits within a few SEMs of the mean, so ε = 4·rtol·μ
+        # is the conformance-harness tolerance (validated over seeds 0–2).
+        return BuiltInstance(
+            name=self.name, sample_fn=sample_fn, check_fn=cond,
+            template=gradnorm_frame_template(self.n_examples, pad),
+            init_carry=None, samples_per_round=self.batch,
+            true_len=self.n_examples,
+            eps=4.0 * self.rtol * mu, delta=0.0,
+            oracle=np.asarray([mu]), estimate=estimate,
+            rounds_per_epoch=self.rounds_per_epoch,
+            max_epochs=self.max_epochs)
+
+
 register_instance(KadabraInstance())
 register_instance(TrianglesInstance())
 register_instance(ReachabilityInstance())
 register_instance(WeightedSamplingInstance())
 register_instance(DiameterInstance())
+register_instance(GradVarianceInstance())

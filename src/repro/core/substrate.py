@@ -29,6 +29,7 @@ jax import) to give SHARD_MAP real devices — exactly what the CI
 
 from __future__ import annotations
 
+import dataclasses
 import enum
 from typing import Any, Optional
 
@@ -84,6 +85,165 @@ def worker_mesh(world: int, axis: str = WORKER_AXIS):
     if reason is not None:
         raise RuntimeError(reason)
     return make_mesh((world,), (axis,), devices=jax.devices()[:world])
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochStepper:
+    """Single-epoch stepping of the engine on a substrate (serving path).
+
+    ``init(seed)`` returns the primed epoch-0 state with every leaf stacked
+    per worker (leading dim ``world``) — the same layout
+    :func:`run_on_substrate` returns.  ``step(state, seed)`` advances exactly
+    one epoch; the underlying program is jitted once per stepper and takes
+    the seed as a traced scalar, so the serving scheduler can cache ONE
+    stepper per session *shape* (instance config × strategy × W × F ×
+    substrate × fold) and run any number of differently-seeded queries
+    through it without recompiling.  ``active(state)`` is the host-side
+    continuation predicate (all workers' verdicts are in lockstep).
+
+    The invariant that makes checkpoint/resume and scheduling sound:
+    ``step^n(init(seed))`` is bit-identical to the fused ``while_loop`` run
+    of :func:`run_on_substrate` — the inter-epoch state is a value pytree,
+    so where it is materialized (device loop, host loop, or a checkpoint on
+    disk) cannot change the trajectory.
+    """
+
+    substrate: "Substrate"
+    world: int
+    cfg: Any
+    fold: Optional[int]
+    init_fn: Any = dataclasses.field(repr=False)
+    step_fn: Any = dataclasses.field(repr=False)
+
+    def init(self, seed: int):
+        return self.init_fn(seed)
+
+    def step(self, state, seed: int):
+        import jax.numpy as jnp
+        return self.step_fn(state, jnp.asarray(seed, jnp.uint32))
+
+    def active(self, state) -> bool:
+        import numpy as np
+        stop = bool(np.asarray(state.stop).reshape(-1)[0])
+        epoch = int(np.asarray(state.epoch).reshape(-1)[0])
+        return (not stop) and epoch < self.cfg.max_epochs
+
+    def run(self, seed: int):
+        """Host-driven run to completion (the stepping-path oracle)."""
+        st = self.init(seed)
+        while self.active(st):
+            st = self.step(st, seed)
+        return st
+
+
+def make_stepper(sample_fn, check_fn, template: PyTree, init_carry: PyTree,
+                 world: int, cfg, *,
+                 substrate: "Substrate | str | None" = None,
+                 frame_shards: int = 0, fold: Optional[int] = None,
+                 mesh=None, mesh_axis: Optional[str] = None) -> EpochStepper:
+    """Build an :class:`EpochStepper` for one engine configuration.
+
+    Key derivation matches the run-to-completion substrates exactly: the
+    logical worker streams are ``jax.random.split(key(seed), world·k)``
+    (k = fold or 1), reshaped ``(world, k)`` so physical worker p carries
+    logical streams ``p·k … p·k+k−1`` — with ``fold=None`` this degenerates
+    to the historical ``split(key(seed), world)`` per-worker streams.  With
+    ``fold`` set, ``init_carry`` must already be stacked ``(k, ...)`` per
+    logical stream (None is fine).
+    """
+    import jax.numpy as jnp
+
+    from .epoch import AXIS, make_program
+    from .frames import axis_collectives, sequential_collectives
+
+    sub = resolve_substrate(
+        substrate if substrate is not None
+        else getattr(cfg, "substrate", None), world)
+    reason = unavailable_reason(sub, world)
+    if reason is not None:
+        raise RuntimeError(f"substrate {sub.value!r}: {reason}")
+    k = fold or 1
+
+    def worker_keys(seed: int):
+        keys = jax.random.split(jax.random.key(seed), world * k)
+        return keys.reshape(world, k) if fold is not None \
+            else keys.reshape(world)
+
+    wids = jnp.arange(world, dtype=jnp.int32)
+
+    if sub == Substrate.SEQUENTIAL:
+        colls = sequential_collectives()
+        axis = None
+        mesh = None
+    elif sub == Substrate.VMAP:
+        colls = axis_collectives(AXIS, world, frame_shards=frame_shards)
+        axis = AXIS
+        mesh = None
+    else:  # SHARD_MAP
+        mesh = mesh if mesh is not None else worker_mesh(world)
+        axis = mesh_axis if mesh_axis is not None else mesh.axis_names[0]
+        if mesh.shape[axis] != world:
+            raise ValueError(f"mesh axis {axis!r} has size "
+                             f"{mesh.shape[axis]}, expected world={world}")
+        colls = axis_collectives(axis, world, frame_shards=frame_shards,
+                                 grouped=True)
+
+    def make_prog(seed_arr):
+        return make_program(sample_fn, check_fn, template, cfg, colls,
+                            seed_scalar=seed_arr, fold=fold)
+
+    if sub == Substrate.SEQUENTIAL:
+        def init_raw(seed_arr, keys):
+            st = make_prog(seed_arr).init(keys[0], jnp.int32(0), init_carry)
+            return jax.tree.map(lambda x: jnp.asarray(x)[None], st)
+
+        def step_raw(st, seed_arr):
+            inner = jax.tree.map(lambda x: x[0], st)
+            out = make_prog(seed_arr).body(inner, jnp.int32(0))
+            return jax.tree.map(lambda x: jnp.asarray(x)[None], out)
+    elif sub == Substrate.VMAP:
+        def init_raw(seed_arr, keys):
+            p = make_prog(seed_arr)
+            return jax.vmap(lambda kk, w: p.init(kk, w, init_carry),
+                            axis_name=axis)(keys, wids)
+
+        def step_raw(st, seed_arr):
+            return jax.vmap(make_prog(seed_arr).body, axis_name=axis)(st, wids)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        from .compat import shard_map
+
+        def _mapped(fn):
+            return shard_map(fn, mesh=mesh, in_specs=(P(axis), P(axis)),
+                             out_specs=P(axis), check_vma=False)
+
+        def init_raw(seed_arr, keys):
+            p = make_prog(seed_arr)
+
+            def per_worker(kk, ws):
+                st = p.init(kk[0], ws[0], init_carry)
+                return jax.tree.map(lambda x: jnp.asarray(x)[None], st)
+
+            return _mapped(per_worker)(keys, wids)
+
+        def step_raw(st, seed_arr):
+            p = make_prog(seed_arr)
+
+            def per_worker(stw, ws):
+                out = p.body(jax.tree.map(lambda x: x[0], stw), ws[0])
+                return jax.tree.map(lambda x: jnp.asarray(x)[None], out)
+
+            return _mapped(per_worker)(st, wids)
+
+    step_jit = jax.jit(step_raw)
+    init_jit = jax.jit(init_raw)
+
+    def init_fn(seed: int):
+        return init_jit(jnp.asarray(seed, jnp.uint32), worker_keys(seed))
+
+    return EpochStepper(substrate=sub, world=world, cfg=cfg, fold=fold,
+                        init_fn=init_fn, step_fn=step_jit)
 
 
 def run_on_substrate(sample_fn, check_fn, template: PyTree,

@@ -1,8 +1,13 @@
-"""Serving launcher: batched prefill + decode, and **adaptive metric
-evaluation** — the paper's ADS engine estimating a serve-side metric
-(mean per-token loss over a prompt distribution) to (ε,δ) with
-empirical-Bernstein stopping instead of a fixed eval-set sweep.
+"""Serving launcher: the adaptive-query pool (the serving subsystem's CLI),
+batched prefill + decode, and **adaptive metric evaluation** — the paper's
+ADS engine estimating a serve-side metric (mean per-token loss over a
+prompt distribution) to (ε,δ) with empirical-Bernstein stopping instead of
+a fixed eval-set sweep.
 
+    # epoch-granular continuous batching over a mixed query stream
+    PYTHONPATH=src python -m repro.launch.serve --pool \
+        --queries wrs:shared:4,triangles:local:2:1 --max-in-flight 2 \
+        [--checkpoint-dir CKPT [--resume] [--checkpoint-every 2]]
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-reduced \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-reduced \
@@ -81,6 +86,54 @@ def adaptive_eval(model: Model, params, stream: TokenStream, *,
     return mean, tau, bool(st.stop)
 
 
+DEFAULT_POOL_QUERIES = "wrs:local:2,triangles:local:2:1"
+
+
+def serve_pool(args) -> int:
+    """Drive the epoch-granular scheduler over a query stream."""
+    from repro.serve import EpochScheduler, SessionSpec
+
+    # --resume restores the checkpointed stream; the default query list only
+    # applies to fresh pools (explicit --queries adds to a resumed one).
+    queries = args.queries if args.queries is not None \
+        else ("" if args.resume else DEFAULT_POOL_QUERIES)
+
+    if args.resume:
+        if not args.checkpoint_dir:
+            print("[serve] --resume needs --checkpoint-dir")
+            return 2
+        sched = EpochScheduler.resume(
+            args.checkpoint_dir, max_in_flight=args.max_in_flight,
+            substrate=args.substrate,
+            checkpoint_every=args.checkpoint_every)
+        print(f"[serve] resumed {sched.pending} session(s) from "
+              f"{args.checkpoint_dir}")
+    else:
+        sched = EpochScheduler(max_in_flight=args.max_in_flight,
+                               substrate=args.substrate,
+                               checkpoint_dir=args.checkpoint_dir or None,
+                               checkpoint_every=args.checkpoint_every)
+    for q in (s for s in queries.split(",") if s):
+        sched.submit(SessionSpec.parse(q))
+
+    t0 = time.time()
+    while not sched.idle:
+        ev = sched.tick()
+        for qid in ev.retired:
+            r = sched.results[qid]
+            est = np.array2string(r.estimate, precision=4)
+            print(f"[serve] tick {ev.tick}: retired {qid} "
+                  f"τ={r.tau} epochs={r.epochs} wait={r.wait_ticks} "
+                  f"est={est}")
+    dt = time.time() - t0
+    n = len(sched.results)
+    taus = sum(r.tau for r in sched.results.values())
+    print(f"[serve] pool drained: {n} queries, {sched.tick_count} ticks, "
+          f"{taus} samples in {dt:.1f}s ({taus / max(dt, 1e-9):.0f} "
+          f"samples/s, {len(sched.cache)} compiled steppers)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m-reduced")
@@ -92,7 +145,23 @@ def main(argv=None) -> int:
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--delta", type=float, default=0.1)
     ap.add_argument("--seq", type=int, default=64)
+    # ----- adaptive-query pool (repro.serve scheduler) -----
+    ap.add_argument("--pool", action="store_true",
+                    help="run the adaptive-query pool scheduler")
+    ap.add_argument("--queries", default=None,
+                    help="comma-separated instance:strategy:world[:seed] "
+                         f"(default for fresh pools: {DEFAULT_POOL_QUERIES}; "
+                         "--resume defaults to the restored stream only)")
+    ap.add_argument("--max-in-flight", type=int, default=2)
+    ap.add_argument("--substrate", default=None)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore sessions from --checkpoint-dir")
     args = ap.parse_args(argv)
+
+    if args.pool:
+        return serve_pool(args)
 
     cfg = _resolve_config(args.arch)
     model = Model(cfg, None)

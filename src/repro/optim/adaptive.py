@@ -27,6 +27,57 @@ from ..core.stopping import GradVarianceCondition
 PyTree = Any
 
 
+# ---------------------------------------------------------------------------
+# ADS-instance form (core/instances.GradVarianceInstance): estimate the mean
+# per-example gradient norm of a FIXED model state over a fixed example
+# population.  Norms are integer-quantized so frames reduce exactly under
+# every strategy (the same trick as the wrs workload) and the exact oracle
+# is a population mean, O(n).
+# ---------------------------------------------------------------------------
+
+
+def quantized_grad_norms(n_examples: int, dim: int, seed: int,
+                         value_scale: int):
+    """Per-example gradient norms of a linear-regression iterate, quantized
+    to ``1 … value_scale−1`` (bounded away from 0 so the relative-SEM target
+    is well-conditioned).  Returns (gq int32 (n,), exact mean of gq/scale).
+    """
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n_examples, dim))
+    w_true = rng.normal(size=(dim,))
+    y = X @ w_true + 0.1 * rng.normal(size=n_examples)
+    w = w_true + 0.5 * rng.normal(size=(dim,))     # a mid-training iterate
+    g = (X @ w - y)[:, None] * X                   # ∇ of ½(x·w − y)² per row
+    norms = np.linalg.norm(g, axis=1)
+    norms = norms / norms.max()
+    gq = np.maximum(1, np.round(norms * (value_scale - 1))).astype(np.int32)
+    return gq, float(gq.mean()) / value_scale
+
+
+def gradnorm_frame_template(n_examples: int, pad_to: int):
+    return {"s1": jnp.zeros((), jnp.int32),
+            "s2": jnp.zeros((), jnp.int32),
+            "hits": jnp.zeros((pad_to,), jnp.int32)}
+
+
+def make_gradnorm_sample_fn(gq, batch: int, pad_to: int):
+    """SAMPLE(): draw ``batch`` example indices uniformly, accumulate the
+    quantized norm moments Σgq, Σgq² plus per-example hit counts (the vector
+    leaf that exercises SHARED_FRAME sharding)."""
+    gq = jnp.asarray(gq, jnp.int32)
+    n = gq.shape[0]
+
+    def sample_fn(key, carry):
+        idx = jax.random.randint(key, (batch,), 0, n)
+        v = gq[idx]
+        hits = jnp.zeros((pad_to,), jnp.int32).at[idx].add(1)
+        data = {"s1": jnp.sum(v), "s2": jnp.sum(v * v), "hits": hits}
+        return StateFrame(num=jnp.int32(batch), data=data), carry
+
+    return sample_fn
+
+
 @dataclasses.dataclass(frozen=True)
 class AdaptiveAccumConfig:
     rtol: float = 0.25

@@ -1,24 +1,13 @@
-"""Elastic rescaling: restore a checkpoint onto a different mesh.
+"""Deprecation shim — elastic rescaling moved to :mod:`repro.serve.elastic`.
 
-Because checkpoints are global-slice chunked (``checkpoint/manager.py``) and
-the data pipeline is stateless in ``(step, shard, n_shards)``, changing the
-data-parallel world size between runs requires nothing beyond computing the
-new shardings and re-distributing — this helper does exactly that.
+The serving subsystem owns elasticity now: :func:`elastic_restore` (restore
+a checkpoint onto a different mesh) lives next to the adaptive-session
+re-sharding path (:func:`repro.serve.elastic.reshard_session`).  This module
+re-exports the old name so existing imports keep working.
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from ..serve.elastic import elastic_restore
 
-
-from repro.checkpoint import CheckpointManager
-
-PyTree = Any
-
-
-def elastic_restore(manager: CheckpointManager, tree_like: PyTree,
-                    new_shardings: Optional[PyTree]
-                    ) -> Optional[Tuple[int, PyTree, dict]]:
-    """Restore the latest checkpoint distributed per ``new_shardings``
-    (computed for the NEW mesh).  Returns (step, tree, meta) or None."""
-    return manager.restore_latest(tree_like, shardings=new_shardings)
+__all__ = ["elastic_restore"]

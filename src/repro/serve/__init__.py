@@ -1,0 +1,28 @@
+"""Adaptive-sampling serving subsystem.
+
+The paper's "almost no synchronization" property is exactly what a *service*
+needs to run many concurrent approximation queries on one device mesh
+without head-of-line blocking: queries only interact with the scheduler at
+epoch boundaries, where the engine state is a plain value pytree.
+
+Three pieces:
+
+* :mod:`repro.serve.session` — :class:`AdaptiveSession`, a checkpointable,
+  resumable handle on one running query (bit-identical resume).
+* :mod:`repro.serve.scheduler` — :class:`EpochScheduler`, epoch-granular
+  continuous batching over a pool of heterogeneous sessions with a
+  max-in-flight admission policy and per-query τ accounting.
+* :mod:`repro.serve.elastic` — elastic re-sharding of SHARED_FRAME sessions
+  (resume at a different worker width W′ | W, bit-identical (τ, estimate)),
+  plus the train-side :func:`elastic_restore` absorbed from
+  ``runtime/elastic.py``.
+"""
+
+from .elastic import elastic_restore, reshard_session
+from .scheduler import EpochScheduler, QueryResult
+from .session import AdaptiveSession, SessionSpec, StepperCache
+
+__all__ = [
+    "AdaptiveSession", "EpochScheduler", "QueryResult", "SessionSpec",
+    "StepperCache", "elastic_restore", "reshard_session",
+]

@@ -1,0 +1,242 @@
+"""Epoch-granular continuous-batching scheduler for adaptive queries.
+
+The paper's loop only synchronizes at epoch boundaries, so an epoch is the
+natural scheduling quantum: each scheduler *tick* advances every in-flight
+query by exactly one epoch (one batched device step per query shape —
+compiled once via the shared :class:`~repro.serve.session.StepperCache`),
+retires the queries whose stopping condition fired, and admits queued
+queries into the freed slots for the *next* tick.  A long-running query
+therefore never blocks a short one — there is no run-to-completion
+head-of-line, only the max-in-flight admission policy.
+
+Per-query accounting: submitted/admitted/retired tick, epochs run, final τ,
+and host wall time spent stepping — the raw rows of the ``BENCH_serve.json``
+throughput/latency artifact (:mod:`benchmarks.bench_serve`).
+
+Preemption safety: with ``checkpoint_dir`` set, every in-flight session is
+checkpointed every ``checkpoint_every`` ticks (epoch boundaries — the only
+points where a session state exists at all), the not-yet-admitted queue is
+persisted as ``queue.json`` on every submit/tick, and
+:meth:`EpochScheduler.resume` rebuilds a scheduler from whatever the
+directory holds — restored sessions continue bit-identically, queued
+queries are resubmitted fresh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections import deque
+from pathlib import Path
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .session import AdaptiveSession, SessionSpec, StepperCache
+
+_QUEUE_FILE = "queue.json"
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Final accounting record of one retired query."""
+
+    qid: str
+    spec: SessionSpec
+    estimate: np.ndarray
+    tau: int
+    epochs: int
+    stopped: bool                 # False only on the max_epochs safety net
+    submitted_tick: int
+    admitted_tick: int
+    retired_tick: int
+    wall_s: float                 # host time spent stepping this query
+
+    @property
+    def wait_ticks(self) -> int:
+        """Ticks spent queued before admission (the latency cost of the
+        admission policy, in scheduling quanta)."""
+        return self.admitted_tick - self.submitted_tick
+
+
+@dataclasses.dataclass
+class TickEvents:
+    tick: int
+    admitted: List[str]
+    retired: List[str]
+
+
+class EpochScheduler:
+    """Continuous batching over a pool of heterogeneous adaptive queries.
+
+    ``max_in_flight`` bounds concurrently-stepped sessions (device memory is
+    dominated by the in-flight frame totals: Θ(n) per LOCAL query, Θ(n/F)
+    per SHARED query per worker — the admission policy is the serving-side
+    face of the paper's memory trade-off).
+    """
+
+    def __init__(self, *, max_in_flight: int = 4,
+                 substrate: Optional[str] = None,
+                 checkpoint_dir: "str | Path | None" = None,
+                 checkpoint_every: int = 0):
+        if max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        self.max_in_flight = max_in_flight
+        self.substrate = substrate
+        self.checkpoint_dir = Path(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_every = checkpoint_every
+        self.cache = StepperCache()
+        self._queue: Deque[Tuple[str, "SessionSpec | AdaptiveSession"]]
+        self._queue = deque()
+        self._active: Dict[str, AdaptiveSession] = {}
+        self._admitted_tick: Dict[str, int] = {}
+        self._submitted_tick: Dict[str, int] = {}
+        self.results: Dict[str, QueryResult] = {}
+        self.tick_count = 0
+        self._n_submitted = 0
+
+    # ------------------------------------------------------------ admission
+    def submit(self, spec: "SessionSpec | AdaptiveSession",
+               qid: Optional[str] = None) -> str:
+        """Enqueue a query (a spec, or an already-restored session)."""
+        inner = spec.spec if isinstance(spec, AdaptiveSession) else spec
+        if qid is None:
+            # skip over ids already taken (e.g. restored from a checkpoint
+            # directory whose numbering this counter has not seen)
+            while True:
+                qid = f"q{self._n_submitted:03d}-{inner.instance}"
+                self._n_submitted += 1
+                if qid not in self._submitted_tick:
+                    break
+        elif qid in self._submitted_tick:
+            raise ValueError(f"duplicate query id {qid!r}")
+        if self.substrate is not None and isinstance(spec, SessionSpec) \
+                and spec.substrate is None:
+            spec = dataclasses.replace(spec, substrate=self.substrate)
+        self._submitted_tick[qid] = self.tick_count
+        self._queue.append((qid, spec))
+        self._persist_queue()
+        return qid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._active)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._active
+
+    # ----------------------------------------------------------- the tick
+    def tick(self) -> TickEvents:
+        """One scheduling quantum: admit → step every in-flight query one
+        epoch → retire at the epoch boundary."""
+        admitted: List[str] = []
+        while self._queue and len(self._active) < self.max_in_flight:
+            qid, item = self._queue.popleft()
+            if isinstance(item, AdaptiveSession):
+                session = item           # restored mid-run; already started
+            else:
+                session = AdaptiveSession.create(item, cache=self.cache)
+                session.start()
+            self._active[qid] = session
+            self._admitted_tick[qid] = self.tick_count
+            admitted.append(qid)
+
+        retired: List[str] = []
+        for qid, session in list(self._active.items()):
+            session.step()
+            if session.done:
+                retired.append(qid)
+
+        for qid in retired:
+            session = self._active.pop(qid)
+            est, res = session.result()
+            self.results[qid] = QueryResult(
+                qid=qid, spec=session.spec, estimate=np.asarray(est),
+                tau=res.num, epochs=res.epochs, stopped=res.stopped,
+                submitted_tick=self._submitted_tick[qid],
+                admitted_tick=self._admitted_tick[qid],
+                retired_tick=self.tick_count, wall_s=session.wall_s)
+            if self.checkpoint_dir is not None:
+                # final state persists too — a restore after drain sees the
+                # query as done instead of re-running it.
+                session.save(self.checkpoint_dir / qid)
+
+        self.tick_count += 1
+        if self.checkpoint_dir is not None:
+            self._persist_queue()
+            if self.checkpoint_every and \
+                    self.tick_count % self.checkpoint_every == 0:
+                self.save_all()
+        return TickEvents(tick=self.tick_count - 1, admitted=admitted,
+                          retired=retired)
+
+    def drain(self, max_ticks: int = 100_000) -> List[TickEvents]:
+        """Tick until queue and pool are empty (every query retired)."""
+        events = []
+        while not self.idle:
+            if self.tick_count >= max_ticks:
+                raise RuntimeError(f"scheduler did not drain in {max_ticks} "
+                                   f"ticks ({self.in_flight} in flight)")
+            events.append(self.tick())
+        return events
+
+    # -------------------------------------------------------- checkpointing
+    def _persist_queue(self) -> None:
+        """Atomically mirror every unretired query (queued AND in-flight)
+        to disk, so a preemption cannot silently drop queries that never
+        got a session checkpoint of their own.  On resume, a per-query
+        checkpoint subdirectory wins (bit-identical continuation); entries
+        with no checkpoint are resubmitted fresh — at-least-once execution,
+        never silent loss."""
+        if self.checkpoint_dir is None:
+            return
+        self.checkpoint_dir.mkdir(parents=True, exist_ok=True)
+        entries = [{"qid": qid,
+                    "spec": (item.spec if isinstance(item, AdaptiveSession)
+                             else item).as_meta()}
+                   for qid, item in self._queue]
+        entries += [{"qid": qid, "spec": session.spec.as_meta()}
+                    for qid, session in self._active.items()]
+        tmp = self.checkpoint_dir / (_QUEUE_FILE + ".tmp")
+        tmp.write_text(json.dumps(entries))
+        os.rename(tmp, self.checkpoint_dir / _QUEUE_FILE)
+
+    def save_all(self) -> None:
+        assert self.checkpoint_dir is not None
+        for qid, session in self._active.items():
+            session.save(self.checkpoint_dir / qid)
+        self._persist_queue()
+
+    @classmethod
+    def resume(cls, checkpoint_dir: "str | Path", *,
+               max_in_flight: int = 4, substrate: Optional[str] = None,
+               checkpoint_every: int = 0) -> "EpochScheduler":
+        """Rebuild a scheduler from a checkpoint directory: every per-query
+        subdirectory with a complete checkpoint is resubmitted as a restored
+        session (done sessions retire on their first tick without stepping —
+        ``step()`` is a no-op once stopped), and queries persisted in
+        ``queue.json`` that never earned a checkpoint of their own are
+        resubmitted fresh under their original ids."""
+        sched = cls(max_in_flight=max_in_flight, substrate=substrate,
+                    checkpoint_dir=checkpoint_dir,
+                    checkpoint_every=checkpoint_every)
+        root = Path(checkpoint_dir)
+        for sub in sorted(p for p in root.iterdir() if p.is_dir()):
+            try:
+                session = AdaptiveSession.restore(sub, cache=sched.cache)
+            except FileNotFoundError:
+                continue
+            sched.submit(session, qid=sub.name)
+        queue_file = root / _QUEUE_FILE
+        if queue_file.exists():
+            for entry in json.loads(queue_file.read_text()):
+                if entry["qid"] not in sched._submitted_tick:
+                    sched.submit(SessionSpec.from_meta(entry["spec"]),
+                                 qid=entry["qid"])
+        return sched

@@ -11,8 +11,8 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.artifact import (SCHEMA_VERSION, _cli, attach_speedups,  # noqa: E402
-                                 diff_bench, load_bench, validate_bench,
-                                 write_bench)
+                                 diff_bench, doc_kind, load_bench,
+                                 validate_bench, write_bench)
 from benchmarks.perf_summary import summarize  # noqa: E402
 
 
@@ -144,6 +144,81 @@ def test_diff_tau_change_always_fails():
     rep = diff_bench(_doc(_rows()), _doc(new))
     assert not rep["ok"]
     assert rep["tau_changes"] == ["wrs/local/W=1"]
+
+
+# ---------------------------------------------------------- kind = "serve"
+
+def _serve_rows():
+    return [
+        {"query": "q000-wrs", "workload": "wrs", "strategy": "local",
+         "world": 2, "us_per_call": 5e5, "tau": 1024, "epochs": 3,
+         "wait_ticks": 0},
+        {"query": "q001-triangles", "workload": "triangles",
+         "strategy": "barrier", "world": 1, "us_per_call": 8e5, "tau": 640,
+         "epochs": 5, "wait_ticks": 2},
+    ]
+
+
+def _serve_doc(rows):
+    return {"schema_version": SCHEMA_VERSION, "suite": "serve",
+            "kind": "serve", "jax_version": "0.4.37", "platform": "cpu",
+            "created_unix": 0.0, "scale": "conformance",
+            "rows": [dict(r) for r in rows]}
+
+
+def test_kind_defaults_to_instances_for_old_artifacts():
+    """Artifacts written before the kind field existed stay valid."""
+    doc = _doc(_rows())
+    assert "kind" not in doc
+    assert doc_kind(doc) == "instances"
+    assert not validate_bench(doc)
+
+
+def test_serve_roundtrip_and_summary(tmp_path):
+    path = write_bench("serve", _serve_rows(), out_dir=tmp_path,
+                       kind="serve")
+    doc = load_bench(path)
+    assert doc_kind(doc) == "serve" and len(doc["rows"]) == 2
+    out = summarize(doc)
+    assert "kind=serve" in out
+    assert "q000-wrs" in out and "pool: 2 queries" in out
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.update(kind="warp"), "kind"),
+    (lambda d: d["rows"][0].pop("query"), "query"),
+    (lambda d: d["rows"][0].update(epochs=0), "epochs"),
+    (lambda d: d["rows"][0].update(wait_ticks=-1), "wait_ticks"),
+    (lambda d: d["rows"][1].update(query="q000-wrs"), "duplicate"),
+    (lambda d: d["rows"][0].update(tau=0), "tau"),
+])
+def test_serve_validator_catches(mutate, needle):
+    doc = _serve_doc(_serve_rows())
+    mutate(doc)
+    errs = validate_bench(doc)
+    assert errs and any(needle in e for e in errs), errs
+
+
+def test_serve_rows_do_not_need_speedup_field():
+    """The BARRIER/speedup coupling is an instances-kind invariant only."""
+    doc = _serve_doc(_serve_rows())
+    assert not validate_bench(doc)
+
+
+def test_serve_diff_joins_on_query_id():
+    old = _serve_doc(_serve_rows())
+    new_rows = _serve_rows()
+    new_rows[0]["us_per_call"] = 5e6           # 10x: regression
+    new_rows[1]["tau"] = 999                   # semantics changed
+    rep = diff_bench(old, _serve_doc(new_rows), rtol=0.25, min_us=50.0)
+    assert not rep["ok"]
+    assert rep["regressions"] == ["q000-wrs"]
+    assert rep["tau_changes"] == ["q001-triangles"]
+
+
+def test_diff_refuses_mixed_kinds():
+    with pytest.raises(ValueError, match="kind"):
+        diff_bench(_doc(_rows()), _serve_doc(_serve_rows()))
 
 
 def test_diff_cli_exit_codes(tmp_path):

@@ -14,7 +14,8 @@ from repro.core.frames import (FrameStrategy, StateFrame, accumulate,
                                combine, zeros_like_frame)
 from repro.core.instances import available_instances
 
-INSTANCES = ("kadabra", "triangles", "reachability", "wrs", "diameter")
+INSTANCES = ("kadabra", "triangles", "reachability", "wrs", "diameter",
+             "gradvar")
 WORLDS = (1, 2, 4)
 # Seed 0 certifies every cell in the fast tier; the slow tier re-certifies
 # at seeds 1 and 2 so no invariant is blessed at a single lucky seed.

@@ -1,0 +1,172 @@
+"""Epoch-granular scheduler: admission policy, epoch-boundary retirement,
+no head-of-line blocking, result fidelity vs solo sessions, stepper-cache
+sharing, and preemption (checkpoint-all → resume) mid-stream."""
+
+import numpy as np
+import pytest
+
+from repro.serve import AdaptiveSession, EpochScheduler, SessionSpec
+
+# small, fast specs (vmap W=2); wrs retires in ~2-3 epochs, reachability
+# and triangles run longer — enough spread to exercise continuous batching.
+WRS = SessionSpec("wrs", "local", world=2, seed=0)
+TRI = SessionSpec("triangles", "local", world=2, seed=1)
+REACH = SessionSpec("reachability", "local", world=2, seed=2)
+
+
+def test_admission_policy_bounds_in_flight():
+    sched = EpochScheduler(max_in_flight=2)
+    for i, spec in enumerate([WRS, TRI, REACH, WRS]):
+        sched.submit(spec, qid=f"q{i}")
+    seen_in_flight = []
+    while not sched.idle:
+        sched.tick()
+        seen_in_flight.append(sched.in_flight)
+    assert max(seen_in_flight) <= 2
+    assert len(sched.results) == 4
+    # the overflow queries waited at least one tick
+    waits = {qid: r.wait_ticks for qid, r in sched.results.items()}
+    assert waits["q0"] == 0 and waits["q1"] == 0
+    assert waits["q2"] >= 1 and waits["q3"] >= 1
+
+
+def test_results_bit_identical_to_solo_sessions():
+    """Interleaving queries in one pool must not change any query's
+    trajectory: each result equals the solo AdaptiveSession run."""
+    sched = EpochScheduler(max_in_flight=2)
+    specs = {"a": WRS, "b": TRI, "c": REACH}
+    for qid, spec in specs.items():
+        sched.submit(spec, qid=qid)
+    sched.drain()
+    for qid, spec in specs.items():
+        solo = AdaptiveSession.create(spec).start().run()
+        est, res = solo.result()
+        got = sched.results[qid]
+        assert got.tau == res.num
+        assert got.epochs == res.epochs
+        assert got.stopped
+        np.testing.assert_array_equal(got.estimate, np.asarray(est))
+
+
+def test_no_head_of_line_blocking():
+    """A short query admitted alongside a long one retires first; a query
+    queued behind it is admitted the very next tick — the long query never
+    monopolizes the pool."""
+    sched = EpochScheduler(max_in_flight=2)
+    sched.submit(REACH, qid="long")     # ~4 epochs
+    sched.submit(WRS, qid="short")      # ~2 epochs
+    sched.submit(TRI, qid="queued")
+    events = sched.drain()
+    retire_tick = {qid: ev.tick for ev in events for qid in ev.retired}
+    admit_tick = {qid: ev.tick for ev in events for qid in ev.admitted}
+    assert retire_tick["short"] < retire_tick["long"]
+    assert admit_tick["queued"] == retire_tick["short"] + 1
+    assert len(sched.results) == 3
+
+
+def test_tau_accounting_per_query():
+    sched = EpochScheduler(max_in_flight=3)
+    sched.submit(WRS, qid="w")
+    sched.drain()
+    r = sched.results["w"]
+    built = AdaptiveSession.create(WRS).built
+    unit = built.samples_per_round * built.rounds_per_epoch * WRS.world
+    assert r.tau > 0 and r.tau % unit == 0
+    assert r.retired_tick >= r.admitted_tick >= r.submitted_tick
+    assert r.wall_s > 0
+
+
+def test_stepper_cache_shared_across_seeds():
+    """Differently-seeded queries of the same shape share one compiled
+    stepper (seed is a traced scalar, not a compile-time constant)."""
+    sched = EpochScheduler(max_in_flight=4)
+    import dataclasses
+    for seed in range(3):
+        sched.submit(dataclasses.replace(WRS, seed=seed))
+    sched.drain()
+    assert len(sched.results) == 3
+    assert len(sched.cache) == 1
+    taus = {r.tau for r in sched.results.values()}
+    assert len(taus) >= 1          # seeds may or may not change tau; all ran
+
+
+def test_checkpoint_all_and_resume(tmp_path):
+    """Preempt a half-drained pool, resume from disk, drain: the union of
+    results matches an uninterrupted pool bit-for-bit."""
+    ref = EpochScheduler(max_in_flight=2)
+    for qid, spec in [("a", WRS), ("b", REACH), ("c", TRI)]:
+        ref.submit(spec, qid=qid)
+    ref.drain()
+
+    sched = EpochScheduler(max_in_flight=2, checkpoint_dir=tmp_path)
+    for qid, spec in [("a", WRS), ("b", REACH), ("c", TRI)]:
+        sched.submit(spec, qid=qid)
+    sched.tick()                   # some progress, nothing drained
+    sched.save_all()
+    done_early = dict(sched.results)
+
+    resumed = EpochScheduler.resume(tmp_path, max_in_flight=2)
+    # queries never admitted before the preemption are resubmitted fresh
+    restored = {qid for qid, *_ in resumed._queue}
+    for qid, spec in [("a", WRS), ("b", REACH), ("c", TRI)]:
+        if qid not in restored and qid not in done_early:
+            resumed.submit(spec, qid=qid)
+    resumed.drain()
+
+    merged = {**done_early, **resumed.results}
+    assert set(merged) == {"a", "b", "c"}
+    for qid in ("a", "b", "c"):
+        assert merged[qid].tau == ref.results[qid].tau
+        assert merged[qid].epochs == ref.results[qid].epochs
+        np.testing.assert_array_equal(merged[qid].estimate,
+                                      ref.results[qid].estimate)
+
+
+def test_resume_recovers_unretired_queries_without_session_checkpoints(
+        tmp_path):
+    """Hard preemption (no save_all, checkpoint_every=0): queued queries
+    AND admitted-but-never-checkpointed queries survive via queue.json —
+    resubmitted fresh rather than silently dropped."""
+    sched = EpochScheduler(max_in_flight=1, checkpoint_dir=tmp_path)
+    for qid, spec in [("a", WRS), ("b", TRI), ("c", REACH)]:
+        sched.submit(spec, qid=qid)
+    sched.tick()                   # admits only "a"; no session checkpoints
+    assert (tmp_path / "queue.json").exists()
+    # process dies here — rebuild purely from disk
+    resumed = EpochScheduler.resume(tmp_path, max_in_flight=2)
+    resumed.drain()
+    assert set(resumed.results) == {"a", "b", "c"}
+    ref = EpochScheduler(max_in_flight=2)
+    ref.submit(WRS, qid="a")
+    ref.drain()
+    assert resumed.results["a"].tau == ref.results["a"].tau
+
+
+def test_resume_auto_ids_skip_restored_ids(tmp_path):
+    """After a resume, auto-generated query ids never collide with
+    restored ones."""
+    sched = EpochScheduler(max_in_flight=1, checkpoint_dir=tmp_path)
+    sched.submit(WRS)              # auto id q000-wrs
+    sched.tick()
+    sched.save_all()
+    resumed = EpochScheduler.resume(tmp_path, max_in_flight=1)
+    qid2 = resumed.submit(WRS)     # counter restarts at 0 — must not clash
+    assert qid2 != "q000-wrs"
+    resumed.drain()
+    assert {"q000-wrs", qid2} <= set(resumed.results)
+
+
+def test_scheduler_validation():
+    with pytest.raises(ValueError):
+        EpochScheduler(max_in_flight=0)
+    sched = EpochScheduler()
+    sched.submit(WRS, qid="dup")
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.submit(WRS, qid="dup")
+
+
+def test_substrate_override_applies_to_submitted_specs():
+    sched = EpochScheduler(max_in_flight=1, substrate="vmap")
+    qid = sched.submit(SessionSpec("wrs", "local", world=2))
+    sched.drain()
+    assert sched.results[qid].spec.substrate == "vmap"

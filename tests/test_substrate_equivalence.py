@@ -32,7 +32,8 @@ from repro.core.substrate import (Substrate, available_substrates,
                                   unavailable_reason)
 
 ROOT = Path(__file__).resolve().parents[1]
-INSTANCES = ("kadabra", "triangles", "reachability", "wrs", "diameter")
+INSTANCES = ("kadabra", "triangles", "reachability", "wrs", "diameter",
+             "gradvar")
 
 # Only sweep worlds this process can cross-check on ≥ 2 substrates: W=1
 # always; W>1 joins when shard_map has enough devices (the CI substrate job
