@@ -8,7 +8,7 @@ jsonschema dependency in the container):
 Envelope (one file per benchmark suite)::
 
     {
-      "schema_version": 1,
+      "schema_version": 2,
       "suite": "instances",            # BENCH_<suite>.json
       "kind": "instances",             # row schema: "instances" | "serve"
       "jax_version": "0.4.37",
@@ -20,7 +20,10 @@ Envelope (one file per benchmark suite)::
 
 ``kind`` selects the row schema and the diff join key; artifacts written
 before the field existed validate as ``kind="instances"`` (the default), so
-old uploads stay readable and diffable.
+old uploads stay readable and diffable.  ``schema_version`` 1 artifacts
+also stay valid: version 2 (placement-aware serving) adds the
+``devices_leased`` / ``placement_wait_ticks`` serve-row fields, which are
+required at version 2 and optional (defaulting to 0) at version 1.
 
 Row, ``kind="instances"`` (one measured strategy×W cell)::
 
@@ -40,11 +43,13 @@ Row, ``kind="serve"`` (one retired scheduler query)::
       "query": "q000-kadabra",         # unique query id (the join key)
       "workload": "kadabra",
       "strategy": "local",
-      "world": 4,
+      "world": 4,                      # FINAL world (pressure may resize)
       "us_per_call": 250000.0,         # host wall time stepping it, > 0
       "tau": 4096,                     # final sample count, > 0
       "epochs": 12,                    # epochs to retirement, ≥ 1
-      "wait_ticks": 3                  # ticks queued before admission, ≥ 0
+      "wait_ticks": 3,                 # ticks queued before admission, ≥ 0
+      "devices_leased": 4,             # peak lease width, ≥ 0 (0: no pool)
+      "placement_wait_ticks": 1        # ticks queued on a full pool, ≥ 0
     }
 
 Usage::
@@ -68,7 +73,10 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# older artifacts that remain readable/diffable (the v2 additions are
+# serve-row placement fields, absent-means-0 when reading v1)
+_READABLE_VERSIONS = (1, SCHEMA_VERSION)
 
 _ENVELOPE_FIELDS = {
     "schema_version": int,
@@ -100,6 +108,12 @@ _ROW_FIELDS_SERVE = {
     "wait_ticks": int,
 }
 
+# placement columns: required at schema_version 2, optional (0) at 1
+_ROW_FIELDS_SERVE_V2 = {
+    "devices_leased": int,
+    "placement_wait_ticks": int,
+}
+
 _STRATEGIES = ("lock", "barrier", "local", "shared", "indexed")
 _SCALES = ("conformance", "bench")
 _KINDS = ("instances", "serve")
@@ -123,9 +137,9 @@ def validate_bench(doc: Dict[str, Any]) -> List[str]:
                         f"{type(doc[key]).__name__}")
     if errs:
         return errs
-    if doc["schema_version"] != SCHEMA_VERSION:
-        errs.append(f"schema_version {doc['schema_version']} != "
-                    f"{SCHEMA_VERSION}")
+    if doc["schema_version"] not in _READABLE_VERSIONS:
+        errs.append(f"schema_version {doc['schema_version']} not in "
+                    f"{_READABLE_VERSIONS}")
     if doc["scale"] not in _SCALES:
         errs.append(f"scale {doc['scale']!r} not in {_SCALES}")
     kind = doc_kind(doc)
@@ -133,7 +147,9 @@ def validate_bench(doc: Dict[str, Any]) -> List[str]:
         errs.append(f"kind {kind!r} not in {_KINDS}")
         return errs
     serve = kind == "serve"
-    row_fields = _ROW_FIELDS_SERVE if serve else _ROW_FIELDS
+    row_fields = dict(_ROW_FIELDS_SERVE) if serve else _ROW_FIELDS
+    if serve and doc["schema_version"] >= 2:
+        row_fields.update(_ROW_FIELDS_SERVE_V2)  # required from v2 on
     if not doc["rows"]:
         errs.append("rows is empty")
     barrier_us: Dict[tuple, float] = {}
@@ -164,6 +180,15 @@ def validate_bench(doc: Dict[str, Any]) -> List[str]:
                 errs.append(f"{where}: epochs {row['epochs']} < 1")
             if row["wait_ticks"] < 0:
                 errs.append(f"{where}: wait_ticks {row['wait_ticks']} < 0")
+            # placement fields: required at v2 (row_fields), optional at
+            # v1 — but never negative, and never mistyped, when present
+            for key in _ROW_FIELDS_SERVE_V2:
+                val = row.get(key, 0)
+                if isinstance(val, bool) or not isinstance(val, int):
+                    errs.append(f"{where}.{key}: type "
+                                f"{type(val).__name__}")
+                elif val < 0:
+                    errs.append(f"{where}: {key} {val} < 0")
             if row["query"] in seen_queries:
                 errs.append(f"{where}: duplicate query id {row['query']!r} "
                             f"(also rows[{seen_queries[row['query']]}])")
@@ -205,8 +230,13 @@ def attach_speedups(rows: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
 def write_bench(suite: str, rows: Sequence[Dict[str, Any]], *,
                 out_dir: "str | Path" = "bench-artifacts",
                 scale: str = "conformance",
-                kind: str = "instances") -> Path:
-    """Validate and write ``BENCH_<suite>.json``; returns the path."""
+                kind: str = "instances",
+                pool_devices: Optional[int] = None) -> Path:
+    """Validate and write ``BENCH_<suite>.json``; returns the path.
+
+    ``pool_devices`` (serve runs with a placement pool) records the pool
+    capacity in the envelope so the summary can print device utilization —
+    optional, and ignored by the validator when absent."""
     import jax
 
     doc = {
@@ -219,6 +249,8 @@ def write_bench(suite: str, rows: Sequence[Dict[str, Any]], *,
         "scale": scale,
         "rows": list(rows),
     }
+    if pool_devices is not None:
+        doc["pool_devices"] = pool_devices
     errs = validate_bench(doc)
     if errs:
         raise ValueError("refusing to write invalid BENCH artifact:\n  "

@@ -4,7 +4,8 @@ the ``BENCH_serve.json`` perf artifact (``kind="serve"`` schema in
 :mod:`benchmarks.artifact`).
 
     PYTHONPATH=src python -m benchmarks.bench_serve \\
-        [--max-in-flight 3] [--queries SPEC[,SPEC...]] [--out DIR]
+        [--max-in-flight 3] [--queries SPEC[,SPEC...]] [--out DIR] \\
+        [--topology auto|N|GxN] [--pressure-policy shrink[-regrow][:min=N]]
 
 Each SPEC is ``instance:strategy:world[:seed]``; the default stream mixes
 three workloads across strategies and worker counts — small enough for the
@@ -12,20 +13,28 @@ CI ``serve-smoke`` job, heterogeneous enough that continuous batching at
 epoch granularity is actually exercised (queries retire at different
 ticks and queued queries are admitted into freed slots).
 
+``--topology`` attaches a placement pool (:mod:`repro.serve.placement`):
+each admitted query leases a pairwise-disjoint submesh, rows gain real
+``devices_leased`` / ``placement_wait_ticks`` numbers, and
+``--pressure-policy`` lets the scheduler resize SHARED_FRAME sessions under
+queued load — the CI ``serve-placement`` job runs exactly that under
+forced-8-device XLA flags.
+
 Per-query τ is a pure function of (instance, strategy, world, seed), so the
 artifact rows are deterministic modulo wall time — exactly what
 ``benchmarks.artifact diff`` needs: τ changes are semantic regressions,
-``us_per_call`` moves inside a tolerance band.
+``us_per_call`` moves inside a tolerance band.  (Pressure-driven reshards
+preserve τ bit-for-bit, so rows stay deterministic even under a pool.)
 """
 
 from __future__ import annotations
 
 import argparse
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from benchmarks.artifact import write_bench
 from benchmarks.common import emit
-from repro.serve import EpochScheduler, SessionSpec
+from repro.serve import EpochScheduler, PressurePolicy, SessionSpec
 
 DEFAULT_QUERIES = (
     "reachability:local:2:0",
@@ -39,24 +48,39 @@ DEFAULT_QUERIES = (
 
 def run(queries: Sequence[str] = DEFAULT_QUERIES, *,
         max_in_flight: int = 3, substrate: "str | None" = None,
+        topology: "str | None" = None,
+        pressure_policy: str = "none",
         out_dir: str = "bench-artifacts") -> str:
-    sched = EpochScheduler(max_in_flight=max_in_flight, substrate=substrate)
+    pool = None
+    if topology:
+        from repro.launch.mesh import make_device_pool
+        pool = make_device_pool(topology)
+    pressure: Optional[PressurePolicy] = PressurePolicy.parse(pressure_policy)
+    sched = EpochScheduler(max_in_flight=max_in_flight, substrate=substrate,
+                           pool=pool, pressure=pressure)
     for q in queries:
         sched.submit(SessionSpec.parse(q))
-    sched.drain()
+    for ev in sched.drain():
+        for qid, old_w, new_w in ev.resharded:
+            emit(f"serve/reshard/{qid}", 0.0, f"W={old_w} -> {new_w}")
 
     rows: List[dict] = []
     for qid, r in sorted(sched.results.items()):
         rows.append({"query": qid, "workload": r.spec.instance,
                      "strategy": r.spec.strategy, "world": r.spec.world,
                      "us_per_call": r.wall_s * 1e6, "tau": r.tau,
-                     "epochs": r.epochs, "wait_ticks": r.wait_ticks})
+                     "epochs": r.epochs, "wait_ticks": r.wait_ticks,
+                     "devices_leased": r.devices_leased,
+                     "placement_wait_ticks": r.placement_wait_ticks})
         emit(f"serve/{qid}", r.wall_s,
-             f"tau={r.tau} epochs={r.epochs} wait={r.wait_ticks}")
-    path = write_bench("serve", rows, out_dir=out_dir, kind="serve")
+             f"tau={r.tau} epochs={r.epochs} wait={r.wait_ticks} "
+             f"dev={r.devices_leased} pwait={r.placement_wait_ticks}")
+    path = write_bench("serve", rows, out_dir=out_dir, kind="serve",
+                       pool_devices=pool.capacity if pool else None)
     print(f"# wrote {path} ({len(rows)} queries, "
           f"{sched.tick_count} scheduler ticks, "
-          f"{len(sched.cache)} compiled steppers)")
+          f"{len(sched.cache)} compiled steppers"
+          + (f", pool of {pool.capacity}" if pool else "") + ")")
     return str(path)
 
 
@@ -68,11 +92,20 @@ def main() -> int:
     ap.add_argument("--substrate", default=None,
                     help="force a substrate for every query "
                          "(sequential|vmap|shard_map)")
+    ap.add_argument("--topology", default="",
+                    help="attach a placement pool: 'auto' | 'N' | 'GxN' "
+                         "(empty = no pool)")
+    ap.add_argument("--pressure-policy", default="none",
+                    help="none | shrink | shrink-regrow[:min=N]")
     ap.add_argument("--out", default="bench-artifacts",
                     help="directory for BENCH_serve.json")
     args = ap.parse_args()
+    if PressurePolicy.parse(args.pressure_policy) is not None \
+            and not args.topology:
+        ap.error("--pressure-policy needs --topology (a device pool)")
     run([q for q in args.queries.split(",") if q],
         max_in_flight=args.max_in_flight, substrate=args.substrate,
+        topology=args.topology, pressure_policy=args.pressure_policy,
         out_dir=args.out)
     return 0
 

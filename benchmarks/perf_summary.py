@@ -55,27 +55,53 @@ def summarize(doc: Dict) -> str:
 
 
 def summarize_serve(doc: Dict) -> str:
-    """Per-query latency table + pool aggregates for ``kind="serve"``."""
+    """Per-query latency table + pool aggregates for ``kind="serve"``,
+    plus a device-utilization table when the rows carry placement data."""
     lines = [f"## suite={doc['suite']} kind=serve scale={doc['scale']} "
              f"jax={doc['jax_version']} platform={doc['platform']}",
              f"{'query':<24} {'strategy':<8} {'W':>2} {'epochs':>6} "
-             f"{'tau':>8} {'wait':>5} {'wall_ms':>10}"]
+             f"{'tau':>8} {'wait':>5} {'dev':>4} {'pwait':>5} "
+             f"{'wall_ms':>10}"]
     total_wall = 0.0
     total_tau = 0
     waits = []
+    placed = []                      # (query, devices_leased, epochs)
     for r in sorted(doc["rows"], key=lambda r: r["query"]):
         wall_ms = r["us_per_call"] / 1e3
         total_wall += wall_ms
         total_tau += r["tau"]
         waits.append(r["wait_ticks"])
+        dev = r.get("devices_leased", 0)
+        pwait = r.get("placement_wait_ticks", 0)
+        if dev:
+            placed.append((r["query"], dev, r["epochs"]))
         lines.append(f"{r['query']:<24} {r['strategy']:<8} {r['world']:>2} "
                      f"{r['epochs']:>6} {r['tau']:>8} {r['wait_ticks']:>5} "
-                     f"{wall_ms:>10.1f}")
+                     f"{dev:>4} {pwait:>5} {wall_ms:>10.1f}")
     n = len(doc["rows"])
     lines.append(f"# pool: {n} queries, {total_tau} samples, "
                  f"{total_wall:.1f}ms stepping wall, "
                  f"mean wait {sum(waits)/max(n,1):.1f} ticks, "
                  f"{total_tau/max(total_wall/1e3,1e-9):.0f} samples/s")
+    if placed:
+        # devices_leased records the PEAK lease width, so dev×epochs is an
+        # upper bound on true occupancy for sessions the pressure policy
+        # resized mid-stream (exact integrals would need per-tick widths).
+        lines.append("")
+        lines.append(f"{'device utilization (peak)':<25} {'dev':>4} "
+                     f"{'epochs':>6} {'dev-epochs':>10} {'share':>7}")
+        total_de = sum(d * e for _, d, e in placed)
+        for q, d, e in placed:
+            share = d * e / max(total_de, 1)
+            lines.append(f"{q:<25} {d:>4} {e:>6} {d * e:>10} "
+                         f"{share:>6.0%}")
+        cap = doc.get("pool_devices")
+        mean_w = total_de / max(sum(e for _, _, e in placed), 1)
+        tail = (f"# ≤ {total_de} device-epochs over {len(placed)} placed "
+                f"queries, mean peak lease width {mean_w:.1f}")
+        if isinstance(cap, int) and cap > 0:
+            tail += f" of a {cap}-device pool (≤ {mean_w / cap:.0%})"
+        lines.append(tail)
     return "\n".join(lines)
 
 

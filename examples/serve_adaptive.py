@@ -18,6 +18,12 @@ def main() -> None:
     serve_mod.main(["--pool", "--queries",
                     "wrs:local:2,reachability:shared:2:1", "--max-in-flight",
                     "2"])
+    print("\n[example] placement-aware pool: disjoint leases + pressure "
+          "(worker-slot accounting works even on one device):")
+    serve_mod.main(["--pool", "--queries",
+                    "reachability:shared:2,wrs:local:2:1",
+                    "--max-in-flight", "4", "--topology", "2",
+                    "--pressure-policy", "shrink:min=1"])
     print("\n[example] batched greedy generation:")
     serve_mod.main(["--arch", "smollm-360m-reduced", "--batch", "4",
                     "--prompt-len", "16", "--gen", "16"])

@@ -78,13 +78,32 @@ def available_substrates(world: int) -> tuple:
                  if unavailable_reason(s, world) is None)
 
 
-def worker_mesh(world: int, axis: str = WORKER_AXIS):
-    """A 1-D mesh of ``world`` devices for the engine's worker axis."""
+def worker_mesh(world: int, axis: str = WORKER_AXIS, devices=None):
+    """A 1-D mesh of ``world`` devices for the engine's worker axis.
+
+    ``devices`` — an explicit device list (any subset of ``jax.devices()``,
+    leading or not: the serving placement layer leases *disjoint* submeshes,
+    so concurrent sessions must be buildable on e.g. devices ``[4..7]``).
+    Default: the historical leading ``jax.devices()[:world]``.
+    """
     from .compat import make_mesh
-    reason = unavailable_reason(Substrate.SHARD_MAP, world)
-    if reason is not None:
-        raise RuntimeError(reason)
-    return make_mesh((world,), (axis,), devices=jax.devices()[:world])
+    if devices is None:
+        reason = unavailable_reason(Substrate.SHARD_MAP, world)
+        if reason is not None:
+            raise RuntimeError(reason)
+        devices = jax.devices()[:world]
+    devices = list(devices)
+    if len(devices) != world:
+        raise ValueError(f"worker_mesh needs exactly world={world} devices, "
+                         f"got {len(devices)}")
+    return make_mesh((world,), (axis,), devices=devices)
+
+
+def mesh_device_ids(mesh) -> tuple:
+    """The flat device ids of a mesh, in mesh order — the part of a stepper
+    cache key that distinguishes same-shape programs bound to different
+    submeshes."""
+    return tuple(d.id for d in mesh.devices.flat)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,11 +23,22 @@ def make_mesh(shape, axes):
     return _compat_make_mesh(shape, axes)
 
 
-def make_worker_mesh(world: int, axis: str = WORKER_AXIS):
+def make_worker_mesh(world: int, axis: str = WORKER_AXIS, devices=None):
     """1-D mesh of ``world`` devices for the epoch engine's shard_map
     substrate (raises with the XLA_FLAGS hint when the host has fewer
-    devices — see core/substrate.py)."""
-    return _worker_mesh(world, axis)
+    devices — see core/substrate.py).  ``devices`` pins the mesh to an
+    explicit device list — e.g. a placement-pool lease."""
+    return _worker_mesh(world, axis, devices=devices)
+
+
+def make_device_pool(topology: str = "auto"):
+    """A :class:`repro.serve.placement.DevicePool` over the machine
+    topology — ``"auto"`` reads the live JAX runtime (grouped by process),
+    ``"N"``/``"GxN"`` build abstract pools (see ``DeviceTopology.parse``).
+    Lease → mesh binding happens through ``SessionSpec.placement`` (the
+    session build calls ``worker_mesh(devices=...)`` itself)."""
+    from ..serve.placement import DevicePool, DeviceTopology
+    return DevicePool(DeviceTopology.parse(topology))
 
 
 def dp_axes(mesh) -> tuple:

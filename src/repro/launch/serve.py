@@ -8,6 +8,11 @@ a fixed eval-set sweep.
     PYTHONPATH=src python -m repro.launch.serve --pool \
         --queries wrs:shared:4,triangles:local:2:1 --max-in-flight 2 \
         [--checkpoint-dir CKPT [--resume] [--checkpoint-every 2]]
+    # placement-aware: disjoint submeshes + pressure-driven elasticity
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --pool --substrate shard_map \
+        --topology auto --pressure-policy shrink-regrow \
+        --queries reachability:shared:4,reachability:shared:4:1,wrs:local:2
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-reduced \
         --batch 4 --prompt-len 32 --gen 16
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-reduced \
@@ -91,12 +96,23 @@ DEFAULT_POOL_QUERIES = "wrs:local:2,triangles:local:2:1"
 
 def serve_pool(args) -> int:
     """Drive the epoch-granular scheduler over a query stream."""
-    from repro.serve import EpochScheduler, SessionSpec
+    from repro.launch.mesh import make_device_pool
+    from repro.serve import EpochScheduler, PressurePolicy, SessionSpec
 
     # --resume restores the checkpointed stream; the default query list only
     # applies to fresh pools (explicit --queries adds to a resumed one).
     queries = args.queries if args.queries is not None \
         else ("" if args.resume else DEFAULT_POOL_QUERIES)
+
+    pool = make_device_pool(args.topology) if args.topology else None
+    pressure = PressurePolicy.parse(args.pressure_policy)
+    if pressure is not None and pool is None:
+        print("[serve] --pressure-policy needs --topology (a device pool)")
+        return 2
+    if pool is not None:
+        print(f"[serve] device pool: {pool.capacity} slot(s) in "
+              f"{len(pool.topology.groups)} group(s)"
+              + (f", pressure={args.pressure_policy}" if pressure else ""))
 
     if args.resume:
         if not args.checkpoint_dir:
@@ -104,13 +120,14 @@ def serve_pool(args) -> int:
             return 2
         sched = EpochScheduler.resume(
             args.checkpoint_dir, max_in_flight=args.max_in_flight,
-            substrate=args.substrate,
+            substrate=args.substrate, pool=pool, pressure=pressure,
             checkpoint_every=args.checkpoint_every)
         print(f"[serve] resumed {sched.pending} session(s) from "
               f"{args.checkpoint_dir}")
     else:
         sched = EpochScheduler(max_in_flight=args.max_in_flight,
                                substrate=args.substrate,
+                               pool=pool, pressure=pressure,
                                checkpoint_dir=args.checkpoint_dir or None,
                                checkpoint_every=args.checkpoint_every)
     for q in (s for s in queries.split(",") if s):
@@ -119,12 +136,18 @@ def serve_pool(args) -> int:
     t0 = time.time()
     while not sched.idle:
         ev = sched.tick()
+        for qid, old_w, new_w in ev.resharded:
+            word = "shrunk" if new_w < old_w else "regrown"
+            print(f"[serve] tick {ev.tick}: {word} {qid} "
+                  f"W={old_w} → {new_w} (pressure)")
         for qid in ev.retired:
             r = sched.results[qid]
             est = np.array2string(r.estimate, precision=4)
+            place = f" dev={r.devices_leased}" \
+                f" pwait={r.placement_wait_ticks}" if pool else ""
             print(f"[serve] tick {ev.tick}: retired {qid} "
-                  f"τ={r.tau} epochs={r.epochs} wait={r.wait_ticks} "
-                  f"est={est}")
+                  f"τ={r.tau} epochs={r.epochs} wait={r.wait_ticks}"
+                  f"{place} est={est}")
     dt = time.time() - t0
     n = len(sched.results)
     taus = sum(r.tau for r in sched.results.values())
@@ -154,6 +177,14 @@ def main(argv=None) -> int:
                          "--resume defaults to the restored stream only)")
     ap.add_argument("--max-in-flight", type=int, default=2)
     ap.add_argument("--substrate", default=None)
+    ap.add_argument("--topology", default="",
+                    help="device pool topology: 'auto' (live JAX runtime), "
+                         "'N' (one group of N), or 'GxN' (G groups of N); "
+                         "empty = no placement pool (legacy sharing)")
+    ap.add_argument("--pressure-policy", default="none",
+                    help="none | shrink | shrink-regrow[:min=N] — resize "
+                         "SHARED_FRAME sessions under queued load "
+                         "(needs --topology)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true",

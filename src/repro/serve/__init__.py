@@ -16,13 +16,21 @@ Three pieces:
   (resume at a different worker width W′ | W, bit-identical (τ, estimate)),
   plus the train-side :func:`elastic_restore` absorbed from
   ``runtime/elastic.py``.
+* :mod:`repro.serve.placement` — the device-topology pool: carve pairwise-
+  disjoint submeshes with lease/release semantics so concurrent sessions
+  run on *different* devices instead of contending for the leading ones,
+  and the :class:`PressurePolicy` that resizes SHARED_FRAME sessions under
+  queued load.
 """
 
 from .elastic import elastic_restore, reshard_session
+from .placement import (DevicePool, DeviceTopology, Lease, PlacementWait,
+                        PressurePolicy)
 from .scheduler import EpochScheduler, QueryResult
 from .session import AdaptiveSession, SessionSpec, StepperCache
 
 __all__ = [
-    "AdaptiveSession", "EpochScheduler", "QueryResult", "SessionSpec",
+    "AdaptiveSession", "DevicePool", "DeviceTopology", "EpochScheduler",
+    "Lease", "PlacementWait", "PressurePolicy", "QueryResult", "SessionSpec",
     "StepperCache", "elastic_restore", "reshard_session",
 ]

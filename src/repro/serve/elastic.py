@@ -140,6 +140,7 @@ def reshard_state(state, *, old_spec: SessionSpec, new_spec: SessionSpec,
 
 def reshard_session(session: AdaptiveSession, new_world: int, *,
                     substrate: Optional[str] = None,
+                    placement: Optional[tuple] = None,
                     cache: Optional[StepperCache] = None) -> AdaptiveSession:
     """Resume ``session`` on ``new_world`` physical workers (SHARED_FRAME).
 
@@ -147,6 +148,11 @@ def reshard_session(session: AdaptiveSession, new_world: int, *,
     session continues the identical logical trajectory — per-worker shard
     memory becomes Θ(n/W′) — and its final (τ, estimate) is bit-identical
     to the uninterrupted original run.
+
+    ``placement`` pins the resharded session to specific device ids (a
+    ``shard_map`` submesh — e.g. the leading half of the lease a
+    pressure-driven shrink keeps, see :mod:`repro.serve.placement`); it
+    implies ``substrate="shard_map"``.
     """
     spec = session.spec
     if spec.frame_strategy != FrameStrategy.SHARED_FRAME:
@@ -159,9 +165,12 @@ def reshard_session(session: AdaptiveSession, new_world: int, *,
     if lw % new_world != 0:
         raise ValueError(f"new_world={new_world} must divide the session's "
                          f"logical world {lw}")
+    if placement is not None:
+        substrate = "shard_map"
     new_spec = dataclasses.replace(
         spec, world=new_world, logical_world=lw,
         frame_shards=0,            # one contiguous shard per new worker
+        placement=None if placement is None else tuple(placement),
         substrate=substrate if substrate is not None else
         (None if new_world != spec.world else spec.substrate))
     resharded = AdaptiveSession.create(new_spec, cache=cache)

@@ -1,25 +1,43 @@
 """Epoch-granular continuous-batching scheduler for adaptive queries.
 
 The paper's loop only synchronizes at epoch boundaries, so an epoch is the
-natural scheduling quantum: each scheduler *tick* advances every in-flight
-query by exactly one epoch (one batched device step per query shape —
-compiled once via the shared :class:`~repro.serve.session.StepperCache`),
-retires the queries whose stopping condition fired, and admits queued
-queries into the freed slots for the *next* tick.  A long-running query
-therefore never blocks a short one — there is no run-to-completion
-head-of-line, only the max-in-flight admission policy.
+natural scheduling quantum.  :meth:`EpochScheduler.tick` is three stages:
+
+1. **Pressure** (:mod:`repro.serve.placement`, optional): when the queue's
+   head cannot be placed, shrink the widest in-flight SHARED_FRAME session
+   W → W/2 through :func:`repro.serve.elastic.reshard_session` — the
+   paper's Θ(n) ↔ Θ(n/W) memory/width trade-off driven by load instead of
+   by hand (the resized session's (τ, estimate) trajectory is bit-identical
+   to never having been resized).  When the queue is drained, re-grow
+   shrunk sessions toward their logical width.
+2. **Admission**: pop queued queries into free slots, bounded by
+   ``max_in_flight`` and — when a :class:`~repro.serve.placement.DevicePool`
+   is attached — by a **disjoint submesh lease** per query
+   (:exc:`PlacementWait` keeps the query queued; the pool accounts in
+   worker slots, which are physical devices for ``shard_map`` sessions).
+3. **Epoch step + retirement**: advance every in-flight session one epoch
+   on its own leased mesh (one batched device step per session shape —
+   compiled once via the shared :class:`~repro.serve.session.StepperCache`,
+   keyed on shape *and* mesh device ids), retire the sessions whose
+   stopping condition fired, and release their leases.
+
+A long-running query therefore never blocks a short one — there is no
+run-to-completion head-of-line, only admission policy.
 
 Per-query accounting: submitted/admitted/retired tick, epochs run, final τ,
-and host wall time spent stepping — the raw rows of the ``BENCH_serve.json``
-throughput/latency artifact (:mod:`benchmarks.bench_serve`).
+host wall time, peak ``devices_leased`` and ``placement_wait_ticks`` — the
+raw rows of the ``BENCH_serve.json`` throughput/latency artifact
+(:mod:`benchmarks.bench_serve`).
 
 Preemption safety: with ``checkpoint_dir`` set, every in-flight session is
 checkpointed every ``checkpoint_every`` ticks (epoch boundaries — the only
 points where a session state exists at all), the not-yet-admitted queue is
 persisted as ``queue.json`` on every submit/tick, and
 :meth:`EpochScheduler.resume` rebuilds a scheduler from whatever the
-directory holds — restored sessions continue bit-identically, queued
-queries are resubmitted fresh.
+directory holds — restored sessions continue bit-identically (their
+recorded placement is re-leased through the pool: the same device ids when
+free, an equivalent submesh otherwise), queued queries are resubmitted
+fresh.
 """
 
 from __future__ import annotations
@@ -33,9 +51,21 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .elastic import reshard_session
+from .placement import DevicePool, Lease, PlacementWait, PressurePolicy
 from .session import AdaptiveSession, SessionSpec, StepperCache
 
 _QUEUE_FILE = "queue.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class _Restore:
+    """A checkpointed session awaiting admission: restored lazily so its
+    placement can be re-leased through the pool *before* the stepper is
+    built (the recorded devices may be taken or gone)."""
+
+    path: Path
+    spec: SessionSpec
 
 
 @dataclasses.dataclass
@@ -52,6 +82,8 @@ class QueryResult:
     admitted_tick: int
     retired_tick: int
     wall_s: float                 # host time spent stepping this query
+    devices_leased: int = 0      # peak lease width (0: scheduler had no pool)
+    placement_wait_ticks: int = 0  # ticks queued *because the pool was full*
 
     @property
     def wait_ticks(self) -> int:
@@ -65,6 +97,9 @@ class TickEvents:
     tick: int
     admitted: List[str]
     retired: List[str]
+    # (qid, old_world, new_world) pressure-driven reshards this tick
+    resharded: List[Tuple[str, int, int]] = \
+        dataclasses.field(default_factory=list)
 
 
 class EpochScheduler:
@@ -73,34 +108,55 @@ class EpochScheduler:
     ``max_in_flight`` bounds concurrently-stepped sessions (device memory is
     dominated by the in-flight frame totals: Θ(n) per LOCAL query, Θ(n/F)
     per SHARED query per worker — the admission policy is the serving-side
-    face of the paper's memory trade-off).
+    face of the paper's memory trade-off).  ``pool`` adds the placement
+    dimension: admission additionally requires a disjoint submesh lease of
+    ``spec.world`` slots, and ``pressure`` (requires ``pool``) lets the
+    scheduler resize SHARED_FRAME sessions to relieve queue pressure.
     """
 
     def __init__(self, *, max_in_flight: int = 4,
                  substrate: Optional[str] = None,
+                 pool: Optional[DevicePool] = None,
+                 pressure: Optional[PressurePolicy] = None,
                  checkpoint_dir: "str | Path | None" = None,
                  checkpoint_every: int = 0):
         if max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
+        if pressure is not None and pool is None:
+            raise ValueError("a pressure policy needs a device pool")
         self.max_in_flight = max_in_flight
         self.substrate = substrate
+        self.pool = pool
+        self.pressure = pressure
         self.checkpoint_dir = Path(checkpoint_dir) if checkpoint_dir else None
         self.checkpoint_every = checkpoint_every
         self.cache = StepperCache()
-        self._queue: Deque[Tuple[str, "SessionSpec | AdaptiveSession"]]
+        self._queue: Deque[Tuple[str,
+                                 "SessionSpec | AdaptiveSession | _Restore"]]
         self._queue = deque()
         self._active: Dict[str, AdaptiveSession] = {}
+        self._leases: Dict[str, Lease] = {}
         self._admitted_tick: Dict[str, int] = {}
         self._submitted_tick: Dict[str, int] = {}
+        self._placement_wait: Dict[str, int] = {}
+        self._devices_peak: Dict[str, int] = {}
         self.results: Dict[str, QueryResult] = {}
+        # checkpointed queries resume() could not re-enqueue (e.g. recorded
+        # world wider than the pool) — skipped loudly, never silently
+        self.unresumed: List[str] = []
         self.tick_count = 0
         self._n_submitted = 0
 
     # ------------------------------------------------------------ admission
+    @staticmethod
+    def _spec_of(item) -> SessionSpec:
+        return item.spec if isinstance(item, (AdaptiveSession, _Restore)) \
+            else item
+
     def submit(self, spec: "SessionSpec | AdaptiveSession",
                qid: Optional[str] = None) -> str:
         """Enqueue a query (a spec, or an already-restored session)."""
-        inner = spec.spec if isinstance(spec, AdaptiveSession) else spec
+        inner = self._spec_of(spec)
         if qid is None:
             # skip over ids already taken (e.g. restored from a checkpoint
             # directory whose numbering this counter has not seen)
@@ -111,10 +167,16 @@ class EpochScheduler:
                     break
         elif qid in self._submitted_tick:
             raise ValueError(f"duplicate query id {qid!r}")
+        if self.pool is not None and inner.world > self.pool.capacity:
+            raise ValueError(
+                f"query {qid!r} needs {inner.world} worker slot(s) but the "
+                f"pool holds only {self.pool.capacity} — it could never be "
+                f"admitted")
         if self.substrate is not None and isinstance(spec, SessionSpec) \
                 and spec.substrate is None:
             spec = dataclasses.replace(spec, substrate=self.substrate)
         self._submitted_tick[qid] = self.tick_count
+        self._placement_wait[qid] = 0
         self._queue.append((qid, spec))
         self._persist_queue()
         return qid
@@ -131,21 +193,127 @@ class EpochScheduler:
     def idle(self) -> bool:
         return not self._queue and not self._active
 
-    # ----------------------------------------------------------- the tick
-    def tick(self) -> TickEvents:
-        """One scheduling quantum: admit → step every in-flight query one
-        epoch → retire at the epoch boundary."""
+    def _note_lease(self, qid: str, lease: Optional[Lease]) -> None:
+        if lease is None:
+            return
+        self._leases[qid] = lease
+        self._devices_peak[qid] = max(self._devices_peak.get(qid, 0),
+                                      lease.width)
+
+    def _materialize(self, item, lease: Optional[Lease]) -> AdaptiveSession:
+        """Turn a queue entry into a started session bound to its lease."""
+        ids = None if lease is None else lease.ids
+        if isinstance(item, _Restore):
+            spec = item.spec
+            if spec.substrate == "shard_map" and ids is not None \
+                    and ids != spec.placement:
+                return AdaptiveSession.restore(item.path, cache=self.cache,
+                                               placement=ids)
+            return AdaptiveSession.restore(item.path, cache=self.cache)
+        if isinstance(item, AdaptiveSession):
+            if item.spec.substrate == "shard_map" and ids is not None \
+                    and ids != item.spec.placement:
+                item.rebind_placement(ids, cache=self.cache)
+            return item               # restored mid-run; already started
+        spec = item
+        if spec.substrate == "shard_map" and ids is not None:
+            spec = dataclasses.replace(spec, placement=ids)
+        return AdaptiveSession.create(spec, cache=self.cache).start()
+
+    def _admit(self) -> Tuple[List[str], bool]:
+        """Admission stage: lease a submesh per queued query (FIFO) until
+        the pool or the in-flight budget blocks.  Returns the admitted ids
+        and whether admission stopped on placement (vs max_in_flight)."""
         admitted: List[str] = []
+        blocked_on_placement = False
         while self._queue and len(self._active) < self.max_in_flight:
-            qid, item = self._queue.popleft()
-            if isinstance(item, AdaptiveSession):
-                session = item           # restored mid-run; already started
-            else:
-                session = AdaptiveSession.create(item, cache=self.cache)
-                session.start()
-            self._active[qid] = session
+            qid, item = self._queue[0]
+            spec = self._spec_of(item)
+            lease = None
+            if self.pool is not None:
+                try:
+                    lease = self.pool.lease(spec.world,
+                                            prefer=spec.placement)
+                except PlacementWait:
+                    blocked_on_placement = True
+                    break            # FIFO: the head waits for capacity
+            self._queue.popleft()
+            self._note_lease(qid, lease)
+            self._active[qid] = self._materialize(item, lease)
             self._admitted_tick[qid] = self.tick_count
             admitted.append(qid)
+        return admitted, blocked_on_placement
+
+    # ------------------------------------------------------------- pressure
+    def _shrink_candidates(self) -> List[str]:
+        assert self.pressure is not None
+        floor = max(1, self.pressure.min_world)
+        cands = [
+            qid for qid, s in self._active.items()
+            if s.spec.strategy == "shared" and not s.done
+            and s.spec.world % 2 == 0 and s.spec.world // 2 >= floor]
+        # widest first (frees the most slots); qid tiebreak for determinism
+        return sorted(cands,
+                      key=lambda q: (-self._active[q].spec.world, q))
+
+    def _resize(self, qid: str, new_world: int) -> Tuple[int, int]:
+        """Reshard one in-flight session to ``new_world`` and resize its
+        lease to match.  Returns (old_world, new_world)."""
+        session = self._active[qid]
+        old_world = session.spec.world
+        lease = self._leases.get(qid)
+        placement = None
+        if lease is not None:
+            lease = self.pool.resize(lease, new_world)
+            self._note_lease(qid, lease)
+            if session.spec.substrate == "shard_map":
+                placement = lease.ids
+        self._active[qid] = reshard_session(
+            session, new_world, cache=self.cache, placement=placement,
+            substrate=None if placement is not None
+            else session.spec.substrate)
+        return old_world, new_world
+
+    def _apply_pressure(self) -> List[Tuple[str, int, int]]:
+        """Pressure stage: shrink under queue pressure, re-grow on drain."""
+        if self.pressure is None or self.pool is None:
+            return []
+        events: List[Tuple[str, int, int]] = []
+        if self._queue and len(self._active) < self.max_in_flight:
+            # queued demand exceeds free devices → halve the widest
+            # SHARED_FRAME session until the head fits (or nothing shrinks)
+            head_spec = self._spec_of(self._queue[0][1])
+            while self.pool.free < head_spec.world:
+                cands = self._shrink_candidates()
+                if not cands:
+                    break
+                qid = cands[0]
+                old, new = self._resize(
+                    qid, self._active[qid].spec.world // 2)
+                events.append((qid, old, new))
+        elif not self._queue and self.pressure.regrow and self.pool.free:
+            # drained queue + free devices → give width back (one doubling
+            # step per session per tick keeps re-grow gentle)
+            for qid in sorted(self._active):
+                session = self._active[qid]
+                spec = session.spec
+                lw = spec.logical_world or spec.world
+                target = spec.world * 2
+                if spec.strategy != "shared" or session.done \
+                        or target > lw or lw % target != 0 \
+                        or self.pool.free < target - spec.world:
+                    continue
+                old, new = self._resize(qid, target)
+                events.append((qid, old, new))
+        return events
+
+    # ----------------------------------------------------------- the tick
+    def tick(self) -> TickEvents:
+        """One scheduling quantum: relieve placement pressure → admit (lease
+        a submesh per query) → step every in-flight query one epoch on its
+        own leased mesh → retire at the epoch boundary (releasing leases)."""
+        resharded = self._apply_pressure()
+        admitted, blocked_on_placement = self._admit()
 
         retired: List[str] = []
         for qid, session in list(self._active.items()):
@@ -155,17 +323,29 @@ class EpochScheduler:
 
         for qid in retired:
             session = self._active.pop(qid)
+            lease = self._leases.pop(qid, None)
+            if lease is not None:
+                self.pool.release(lease)
             est, res = session.result()
             self.results[qid] = QueryResult(
                 qid=qid, spec=session.spec, estimate=np.asarray(est),
                 tau=res.num, epochs=res.epochs, stopped=res.stopped,
                 submitted_tick=self._submitted_tick[qid],
                 admitted_tick=self._admitted_tick[qid],
-                retired_tick=self.tick_count, wall_s=session.wall_s)
+                retired_tick=self.tick_count, wall_s=session.wall_s,
+                devices_leased=self._devices_peak.get(qid, 0),
+                placement_wait_ticks=self._placement_wait.get(qid, 0))
             if self.checkpoint_dir is not None:
                 # final state persists too — a restore after drain sees the
                 # query as done instead of re-running it.
                 session.save(self.checkpoint_dir / qid)
+
+        if blocked_on_placement:
+            # the queue spent this tick waiting on devices, not on the
+            # in-flight budget — that is placement latency, and it is what
+            # the BENCH_serve `placement_wait_ticks` column measures.
+            for qid, _ in self._queue:
+                self._placement_wait[qid] += 1
 
         self.tick_count += 1
         if self.checkpoint_dir is not None:
@@ -174,7 +354,7 @@ class EpochScheduler:
                     self.tick_count % self.checkpoint_every == 0:
                 self.save_all()
         return TickEvents(tick=self.tick_count - 1, admitted=admitted,
-                          retired=retired)
+                          retired=retired, resharded=resharded)
 
     def drain(self, max_ticks: int = 100_000) -> List[TickEvents]:
         """Tick until queue and pool are empty (every query retired)."""
@@ -197,9 +377,7 @@ class EpochScheduler:
         if self.checkpoint_dir is None:
             return
         self.checkpoint_dir.mkdir(parents=True, exist_ok=True)
-        entries = [{"qid": qid,
-                    "spec": (item.spec if isinstance(item, AdaptiveSession)
-                             else item).as_meta()}
+        entries = [{"qid": qid, "spec": self._spec_of(item).as_meta()}
                    for qid, item in self._queue]
         entries += [{"qid": qid, "spec": session.spec.as_meta()}
                     for qid, session in self._active.items()]
@@ -216,27 +394,50 @@ class EpochScheduler:
     @classmethod
     def resume(cls, checkpoint_dir: "str | Path", *,
                max_in_flight: int = 4, substrate: Optional[str] = None,
+               pool: Optional[DevicePool] = None,
+               pressure: Optional[PressurePolicy] = None,
                checkpoint_every: int = 0) -> "EpochScheduler":
         """Rebuild a scheduler from a checkpoint directory: every per-query
-        subdirectory with a complete checkpoint is resubmitted as a restored
-        session (done sessions retire on their first tick without stepping —
-        ``step()`` is a no-op once stopped), and queries persisted in
-        ``queue.json`` that never earned a checkpoint of their own are
-        resubmitted fresh under their original ids."""
+        subdirectory with a complete checkpoint is resubmitted as a pending
+        restore — materialized at admission, so its recorded placement is
+        first re-leased through ``pool`` (the same device ids when free, an
+        equivalent submesh otherwise); done sessions retire on their first
+        tick without stepping (``step()`` is a no-op once stopped) — and
+        queries persisted in ``queue.json`` that never earned a checkpoint
+        of their own are resubmitted fresh under their original ids.
+
+        Entries that can *never* be placed on ``pool`` (recorded world wider
+        than the pool's capacity) are left out rather than aborting the
+        whole restore: their ids land in ``sched.unresumed``, a warning
+        names them, and their checkpoints stay on disk untouched (resume
+        them on an adequate pool, or re-shard by hand)."""
+        import warnings
+
+        from ..checkpoint.manager import latest_step, read_meta
         sched = cls(max_in_flight=max_in_flight, substrate=substrate,
+                    pool=pool, pressure=pressure,
                     checkpoint_dir=checkpoint_dir,
                     checkpoint_every=checkpoint_every)
         root = Path(checkpoint_dir)
-        for sub in sorted(p for p in root.iterdir() if p.is_dir()):
+
+        def try_submit(item, qid):
             try:
-                session = AdaptiveSession.restore(sub, cache=sched.cache)
-            except FileNotFoundError:
+                sched.submit(item, qid=qid)
+            except ValueError as e:
+                sched.unresumed.append(qid)
+                warnings.warn(f"resume skipped {qid!r}: {e}", stacklevel=3)
+
+        for sub in sorted(p for p in root.iterdir() if p.is_dir()):
+            step = latest_step(sub)
+            if step is None:
                 continue
-            sched.submit(session, qid=sub.name)
+            spec = SessionSpec.from_meta(read_meta(sub, step)["spec"])
+            try_submit(_Restore(path=sub, spec=spec), sub.name)
         queue_file = root / _QUEUE_FILE
         if queue_file.exists():
             for entry in json.loads(queue_file.read_text()):
-                if entry["qid"] not in sched._submitted_tick:
-                    sched.submit(SessionSpec.from_meta(entry["spec"]),
-                                 qid=entry["qid"])
+                if entry["qid"] not in sched._submitted_tick \
+                        and entry["qid"] not in sched.unresumed:
+                    try_submit(SessionSpec.from_meta(entry["spec"]),
+                               entry["qid"])
         return sched

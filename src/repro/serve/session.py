@@ -53,6 +53,11 @@ class SessionSpec:
     for; it differs from ``world`` only after an elastic re-shard
     (``world`` physical workers each fold ``logical_world/world`` logical
     streams — see :mod:`repro.serve.elastic`).  0 means "same as world".
+
+    ``placement`` pins a ``shard_map`` session to specific device ids — the
+    submesh the placement pool leased it (:mod:`repro.serve.placement`).
+    ``None`` keeps the historical leading-devices mesh.  Recorded in the
+    checkpoint manifest so a resume can re-lease equivalent devices.
     """
 
     instance: str
@@ -62,6 +67,7 @@ class SessionSpec:
     substrate: Optional[str] = None
     frame_shards: int = 0
     logical_world: int = 0
+    placement: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         FrameStrategy(self.strategy)  # validate early
@@ -73,6 +79,16 @@ class SessionSpec:
                 FrameStrategy(self.strategy) != FrameStrategy.SHARED_FRAME:
             raise ValueError("folded execution (logical_world != world) is "
                              "an elastic SHARED_FRAME feature")
+        if self.placement is not None:
+            object.__setattr__(self, "placement", tuple(self.placement))
+            if self.substrate != "shard_map":
+                raise ValueError("placement pins devices and is only "
+                                 "meaningful for substrate='shard_map' "
+                                 f"(got {self.substrate!r})")
+            if len(self.placement) != self.world:
+                raise ValueError(
+                    f"placement names {len(self.placement)} device(s) for "
+                    f"world={self.world}")
 
     @property
     def fold(self) -> Optional[int]:
@@ -85,11 +101,17 @@ class SessionSpec:
 
     def stepper_key(self) -> tuple:
         """Cache key for compiled steppers: everything that changes the
-        traced program.  The seed is deliberately absent — it is a traced
-        scalar of the step function, so differently-seeded queries of the
-        same shape share one compilation."""
+        traced program *or the devices it is bound to*.  The seed is
+        deliberately absent — it is a traced scalar of the step function, so
+        differently-seeded queries of the same shape share one compilation.
+        The placement (mesh device ids) and worker-axis name are present:
+        two same-shape sessions on disjoint submeshes must NOT share a
+        compiled stepper, or one of them would silently run on the other's
+        devices."""
+        from ..core.substrate import WORKER_AXIS
         return (self.instance, self.strategy, self.world, self.frame_shards,
-                self.substrate, self.logical_world)
+                self.substrate, self.logical_world, self.placement,
+                WORKER_AXIS)
 
     def as_meta(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -148,10 +170,15 @@ def _build(spec: SessionSpec) -> Tuple[BuiltInstance, EpochStepper]:
     if k is not None and init_carry is not None:
         init_carry = jax.tree.map(
             lambda x: jnp.stack([jnp.asarray(x)] * k), init_carry)
+    mesh = None
+    if spec.placement is not None:
+        from ..core.substrate import worker_mesh
+        from .placement import lease_devices
+        mesh = worker_mesh(spec.world, devices=lease_devices(spec.placement))
     stepper = make_stepper(built.sample_fn, built.check_fn, built.template,
                            init_carry, spec.world, cfg,
                            substrate=spec.substrate,
-                           frame_shards=spec.frame_shards, fold=k)
+                           frame_shards=spec.frame_shards, fold=k, mesh=mesh)
     return built, stepper
 
 
@@ -194,6 +221,26 @@ class AdaptiveSession:
         built, stepper = cache.get(spec) if cache is not None \
             else _build(spec)
         return cls(spec, built, stepper)
+
+    def rebind_placement(self, placement: "Tuple[int, ...] | None",
+                         cache: Optional[StepperCache] = None
+                         ) -> "AdaptiveSession":
+        """Re-bind this session to a different leased submesh (same shape).
+
+        The inter-epoch state is a value pytree, so *which* devices execute
+        the next epoch cannot change the trajectory — rebinding swaps the
+        stepper (new mesh, possibly a fresh compile via the cache) and keeps
+        the state; the next ``step()`` transfers it to the new devices.
+        Used on resume/admission when the original devices are taken or
+        gone and the pool leased equivalent ones.
+        """
+        placement = None if placement is None else tuple(placement)
+        if placement == self.spec.placement:
+            return self
+        self.spec = dataclasses.replace(self.spec, placement=placement)
+        self.built, self.stepper = cache.get(self.spec) \
+            if cache is not None else _build(self.spec)
+        return self
 
     # ------------------------------------------------------------- running
     def start(self) -> "AdaptiveSession":
@@ -262,7 +309,13 @@ class AdaptiveSession:
 
     @classmethod
     def restore(cls, directory: "str | Path", step: Optional[int] = None,
-                cache: Optional[StepperCache] = None) -> "AdaptiveSession":
+                cache: Optional[StepperCache] = None,
+                placement: Any = "keep") -> "AdaptiveSession":
+        """Rebuild from a checkpoint directory.  ``placement`` overrides the
+        manifest's recorded device ids (pass ``None`` to drop the pin, a
+        tuple to re-lease onto different devices) — the state layout is
+        placement-independent, so the override is always sound; the default
+        ``"keep"`` restores onto the recorded submesh."""
         directory = Path(directory)
         if step is None:
             step = latest_step(directory)
@@ -271,6 +324,10 @@ class AdaptiveSession:
                                         f"{directory}")
         meta = read_meta(directory, step)
         spec = SessionSpec.from_meta(meta["spec"])
+        if not (isinstance(placement, str) and placement == "keep"):
+            spec = dataclasses.replace(
+                spec, placement=None if placement is None
+                else tuple(placement))
         session = cls.create(spec, cache=cache)
         tree, _meta = load_checkpoint(session.state_template(), directory,
                                       step)

@@ -152,10 +152,11 @@ def _serve_rows():
     return [
         {"query": "q000-wrs", "workload": "wrs", "strategy": "local",
          "world": 2, "us_per_call": 5e5, "tau": 1024, "epochs": 3,
-         "wait_ticks": 0},
+         "wait_ticks": 0, "devices_leased": 2, "placement_wait_ticks": 0},
         {"query": "q001-triangles", "workload": "triangles",
          "strategy": "barrier", "world": 1, "us_per_call": 8e5, "tau": 640,
-         "epochs": 5, "wait_ticks": 2},
+         "epochs": 5, "wait_ticks": 2, "devices_leased": 1,
+         "placement_wait_ticks": 1},
     ]
 
 
@@ -191,12 +192,42 @@ def test_serve_roundtrip_and_summary(tmp_path):
     (lambda d: d["rows"][0].update(wait_ticks=-1), "wait_ticks"),
     (lambda d: d["rows"][1].update(query="q000-wrs"), "duplicate"),
     (lambda d: d["rows"][0].update(tau=0), "tau"),
+    (lambda d: d["rows"][0].pop("devices_leased"), "devices_leased"),
+    (lambda d: d["rows"][0].update(devices_leased=-1), "devices_leased"),
+    (lambda d: d["rows"][1].update(placement_wait_ticks=-2),
+     "placement_wait_ticks"),
 ])
 def test_serve_validator_catches(mutate, needle):
     doc = _serve_doc(_serve_rows())
     mutate(doc)
     errs = validate_bench(doc)
     assert errs and any(needle in e for e in errs), errs
+
+
+def test_serve_v1_artifacts_stay_valid_without_placement_fields():
+    """Schema bump is backward-compatible: pre-placement (v1) serve rows
+    lack devices_leased/placement_wait_ticks and still validate; the same
+    rows under v2 do not, and negative values fail under both."""
+    doc = _serve_doc(_serve_rows())
+    doc["schema_version"] = 1
+    for row in doc["rows"]:
+        del row["devices_leased"], row["placement_wait_ticks"]
+    assert not validate_bench(doc)
+    v2 = json.loads(json.dumps(doc))
+    v2["schema_version"] = SCHEMA_VERSION
+    errs = validate_bench(v2)
+    assert errs and any("devices_leased" in e for e in errs)
+    doc["rows"][0]["placement_wait_ticks"] = -1
+    assert any("placement_wait_ticks" in e for e in validate_bench(doc))
+
+
+def test_serve_summary_prints_device_utilization():
+    doc = _serve_doc(_serve_rows())
+    doc["pool_devices"] = 4
+    from benchmarks.perf_summary import summarize_serve
+    out = summarize_serve(doc)
+    assert "device utilization" in out
+    assert "4-device pool" in out
 
 
 def test_serve_rows_do_not_need_speedup_field():

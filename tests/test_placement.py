@@ -1,0 +1,212 @@
+"""Device-topology pool: lease/release invariants, carving policy,
+topology parsing, resize semantics, and the pressure-policy grammar.
+
+The pool is pure bookkeeping over abstract device ids (JAX enters only via
+``DeviceTopology.from_host`` / ``lease_devices``), so the invariants are
+property-tested over random lease/release sequences without any devices:
+
+* live leases are pairwise disjoint,
+* ``free + in_use == capacity`` always, and lease → release round-trips
+  restore capacity exactly,
+* carving never exceeds (or leaves) the physical device set.
+"""
+
+import pytest
+
+from repro.serve.placement import (DevicePool, DeviceTopology, PlacementWait,
+                                   PressurePolicy)
+
+from _hyp import given, settings, st
+
+
+# ------------------------------------------------------------------ topology
+
+def test_topology_parse_grammar():
+    assert DeviceTopology.parse("8").groups == (tuple(range(8)),)
+    assert DeviceTopology.parse("2x4").groups == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert DeviceTopology.parse("8").num_devices == 8
+    with pytest.raises(ValueError):
+        DeviceTopology.parse("0")
+    with pytest.raises(ValueError):
+        DeviceTopology.parse("0x4")
+
+
+def test_topology_rejects_duplicates_and_empty():
+    with pytest.raises(ValueError, match="duplicate"):
+        DeviceTopology(groups=((0, 1), (1, 2)))
+    with pytest.raises(ValueError, match="no devices"):
+        DeviceTopology(groups=())
+
+
+def test_topology_from_host_matches_jax():
+    import jax
+    topo = DeviceTopology.from_host()
+    assert sorted(topo.ids) == sorted(d.id for d in jax.devices())
+
+
+# ------------------------------------------------------------------- leasing
+
+def test_lease_prefers_aligned_disjoint_blocks():
+    pool = DevicePool(8)
+    a, b = pool.lease(4), pool.lease(4)
+    assert a.ids == (0, 1, 2, 3) and b.ids == (4, 5, 6, 7)
+    assert pool.free == 0
+    with pytest.raises(PlacementWait):
+        pool.lease(1)
+    pool.release(a)
+    assert pool.free == 4 and pool.lease(4).ids == (0, 1, 2, 3)
+
+
+def test_lease_stays_inside_one_group_when_possible():
+    pool = DevicePool(DeviceTopology.parse("2x4"))
+    a = pool.lease(2)            # group 0: [0, 1]
+    b = pool.lease(4)            # group 0 has only [2, 3] left → group 1
+    assert a.ids == (0, 1)
+    assert b.ids == (4, 5, 6, 7)
+    c = pool.lease(2)            # back to group 0's tail
+    assert c.ids == (2, 3)
+
+
+def test_lease_spans_groups_only_as_last_resort():
+    pool = DevicePool(DeviceTopology.parse("2x2"))
+    spanning = pool.lease(3)     # no group holds 3 — multi-host fallback
+    assert spanning.ids == (0, 1, 2)
+
+
+def test_lease_prefer_reclaims_exact_ids():
+    pool = DevicePool(8)
+    a = pool.lease(4)
+    pool.release(a)
+    again = pool.lease(4, prefer=(4, 5, 6, 7))
+    assert again.ids == (4, 5, 6, 7)
+    # preferred ids taken → fall back to policy placement of same width
+    other = pool.lease(4, prefer=(4, 5, 6, 7))
+    assert other.ids == (0, 1, 2, 3)
+
+
+def test_lease_validation():
+    pool = DevicePool(4)
+    with pytest.raises(ValueError, match=">= 1"):
+        pool.lease(0)
+    with pytest.raises(ValueError, match="capacity"):
+        pool.lease(5)
+    lease = pool.lease(2)
+    pool.release(lease)
+    with pytest.raises(ValueError, match="not live"):
+        pool.release(lease)
+
+
+def test_release_of_stale_pre_resize_lease_does_not_double_free():
+    """Releasing an outdated Lease object must free the pool's *current*
+    record for that lid — not the stale ids — or two later leases could
+    share a device."""
+    pool = DevicePool(8)
+    original = pool.lease(4)             # (0, 1, 2, 3)
+    pool.resize(original, 2)             # live lease is now (0, 1)
+    taken = pool.lease(2)                # takes the freed (2, 3)
+    pool.release(original)               # stale handle: must free (0, 1)
+    assert sorted(pool.free_ids()) == [0, 1, 4, 5, 6, 7]
+    a, b = pool.lease(4), pool.lease(2)
+    assert set(a.ids).isdisjoint(b.ids) and set(a.ids).isdisjoint(taken.ids)
+
+
+def test_resize_shrink_keeps_leading_ids_and_grow_extends():
+    pool = DevicePool(8)
+    lease = pool.lease(4)
+    small = pool.resize(lease, 2)
+    assert small.ids == (0, 1) and small.lid == lease.lid
+    assert pool.free_ids() == (2, 3, 4, 5, 6, 7)
+    big = pool.resize(small, 4)
+    assert big.ids == (0, 1, 2, 3)
+    other = pool.lease(4)
+    with pytest.raises(PlacementWait):
+        pool.resize(big, 6)
+    assert big.ids == (0, 1, 2, 3)   # failed grow left the lease intact
+    pool.release(other)
+    assert pool.resize(big, 4) is big
+
+
+# ------------------------------------------------- property tests (tests/_hyp)
+
+def _check_invariants(pool: DevicePool, capacity: int):
+    live = pool.leases
+    taken = [i for lease in live for i in lease.ids]
+    assert len(set(taken)) == len(taken), "live leases must be disjoint"
+    assert set(taken) | set(pool.free_ids()) == set(pool.topology.ids)
+    assert pool.free + pool.in_use == capacity == pool.capacity
+    assert set(taken) <= set(pool.topology.ids)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_pool_invariants_over_random_lease_release_sequences(data):
+    capacity = data.draw(st.integers(min_value=1, max_value=16),
+                         label="capacity")
+    n_groups = data.draw(st.integers(min_value=1, max_value=3),
+                         label="groups")
+    per = max(1, capacity // n_groups)
+    topo = DeviceTopology(groups=tuple(
+        tuple(range(g * per, min((g + 1) * per, capacity)))
+        for g in range(n_groups)
+        if range(g * per, min((g + 1) * per, capacity))))
+    pool = DevicePool(topo)
+    capacity = pool.capacity
+    live = []
+    for _ in range(data.draw(st.integers(min_value=1, max_value=40),
+                             label="ops")):
+        do_lease = data.draw(st.booleans(), label="op") or not live
+        if do_lease:
+            width = data.draw(st.integers(min_value=1, max_value=capacity),
+                              label="width")
+            try:
+                live.append(pool.lease(width))
+            except PlacementWait:
+                assert pool.free < width, \
+                    "PlacementWait with enough free ids"
+        else:
+            idx = data.draw(st.integers(min_value=0,
+                                        max_value=len(live) - 1),
+                            label="victim")
+            pool.release(live.pop(idx))
+        _check_invariants(pool, capacity)
+    for lease in live:
+        pool.release(lease)
+    assert pool.free == capacity, "release round-trip must restore capacity"
+    assert pool.free_ids() == tuple(sorted(pool.topology.ids))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_pool_resize_preserves_invariants(data):
+    pool = DevicePool(data.draw(st.integers(min_value=2, max_value=12),
+                                label="capacity"))
+    capacity = pool.capacity
+    lease = pool.lease(data.draw(
+        st.integers(min_value=1, max_value=capacity), label="w0"))
+    for _ in range(data.draw(st.integers(min_value=1, max_value=10),
+                             label="resizes")):
+        new_width = data.draw(st.integers(min_value=1, max_value=capacity),
+                              label="w")
+        try:
+            lease = pool.resize(lease, new_width)
+            assert lease.width == new_width
+        except PlacementWait:
+            assert new_width - lease.width > pool.free
+        _check_invariants(pool, capacity)
+    pool.release(lease)
+    assert pool.free == capacity
+
+
+# ------------------------------------------------------------ pressure policy
+
+def test_pressure_policy_parse():
+    assert PressurePolicy.parse("none") is None
+    assert PressurePolicy.parse("") is None
+    assert PressurePolicy.parse("shrink") == PressurePolicy(min_world=1,
+                                                            regrow=False)
+    assert PressurePolicy.parse("shrink-regrow:min=2") == \
+        PressurePolicy(min_world=2, regrow=True)
+    with pytest.raises(ValueError):
+        PressurePolicy.parse("grow")
+    with pytest.raises(ValueError):
+        PressurePolicy.parse("shrink:max=3")

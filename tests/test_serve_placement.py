@@ -1,0 +1,447 @@
+"""Placement-aware serving: disjoint-submesh scheduling, the stepper-cache
+placement key, pressure-driven elasticity, and placement-aware resume.
+
+The acceptance obligations of this layer:
+
+* two same-shape W=4 sessions running **concurrently** on disjoint
+  submeshes of 8 forced host devices each produce (τ, estimate)
+  bit-identical to the same session run alone on ``jax.devices()[:4]``;
+* a pressure-triggered (scheduler-initiated) reshard W=4 → 2 mid-stream
+  stays bit-identical to the uninterrupted W=4 run;
+* two same-shape sessions on different submeshes get **distinct** compiled
+  stepper-cache entries (a shape-keyed cache would silently run one session
+  on the other's devices).
+
+The pool accounts in worker slots, so everything scheduler-level is also
+exercised in-process on a 1-device host with vmap sessions over an abstract
+topology; the shard_map cells run in a forced-8-device subprocess (or
+in-process under the CI ``serve-placement`` job's XLA flags).
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import (AdaptiveSession, DevicePool, EpochScheduler,
+                         PressurePolicy, SessionSpec, StepperCache)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+SHARED4 = SessionSpec("reachability", "shared", world=4, substrate="vmap")
+
+
+def _solo(spec: SessionSpec):
+    s = AdaptiveSession.create(spec).start().run()
+    est, res = s.result()
+    return np.asarray(est), res
+
+
+# ------------------------------------------------------- spec / cache keying
+
+def test_spec_placement_validation_and_meta_roundtrip():
+    spec = SessionSpec("wrs", "shared", world=2, substrate="shard_map",
+                       placement=[3, 5])
+    assert spec.placement == (3, 5)            # normalized to a tuple
+    back = SessionSpec.from_meta(json.loads(json.dumps(spec.as_meta())))
+    assert back == spec                        # JSON round-trip (checkpoint)
+    with pytest.raises(ValueError, match="shard_map"):
+        SessionSpec("wrs", "shared", world=2, substrate="vmap",
+                    placement=(0, 1))
+    with pytest.raises(ValueError, match="device"):
+        SessionSpec("wrs", "shared", world=2, substrate="shard_map",
+                    placement=(0, 1, 2))
+
+
+def test_stepper_key_distinguishes_placements():
+    """Satellite regression: the compiled-stepper cache key must include the
+    mesh device ids (and axis name), not just the session shape."""
+    a = SessionSpec("wrs", "shared", world=1, substrate="shard_map",
+                    placement=(0,))
+    b = SessionSpec("wrs", "shared", world=1, substrate="shard_map")
+    c = SessionSpec("wrs", "shared", world=1, substrate="shard_map",
+                    placement=(0,))
+    assert a.stepper_key() != b.stepper_key()
+    assert a.stepper_key() == c.stepper_key()
+    from repro.core.substrate import WORKER_AXIS
+    assert WORKER_AXIS in a.stepper_key()
+
+
+def test_stepper_cache_separates_same_shape_on_different_submeshes():
+    """Two same-shape sessions pinned to different (1-device) submeshes get
+    distinct cache entries and both produce the solo result.  (W>1 disjoint
+    submeshes run under the forced-8-device subprocess below.)"""
+    est_ref, res_ref = _solo(SessionSpec("wrs", "shared", world=1,
+                                         substrate="shard_map"))
+    cache = StepperCache()
+    dev0 = jax.devices()[0].id
+    a = AdaptiveSession.create(
+        SessionSpec("wrs", "shared", world=1, substrate="shard_map",
+                    placement=(dev0,)), cache=cache)
+    b = AdaptiveSession.create(
+        SessionSpec("wrs", "shared", world=1, substrate="shard_map"),
+        cache=cache)
+    assert len(cache) == 2      # pinned vs unpinned must not share
+    for s in (a, b):
+        s.start().run()
+        est, res = s.result()
+        assert res.num == res_ref.num
+        np.testing.assert_array_equal(est, est_ref)
+
+
+def test_worker_mesh_builds_on_arbitrary_device_subset():
+    """Placement leases are not leading-device prefixes; the mesh
+    constructor must take any explicit subset (and expose its ids for
+    cache keying)."""
+    from repro.core.substrate import mesh_device_ids, worker_mesh
+    sub = jax.devices()[-1:]          # non-leading whenever the host has >1
+    mesh = worker_mesh(1, devices=sub)
+    assert mesh_device_ids(mesh) == (sub[0].id,)
+    with pytest.raises(ValueError, match="exactly"):
+        worker_mesh(2, devices=sub)
+
+
+# ------------------------------------------------- scheduler admission stage
+
+def test_admission_leases_disjoint_submeshes_and_releases_on_retire():
+    pool = DevicePool(8)
+    sched = EpochScheduler(max_in_flight=4, pool=pool)
+    sched.submit(SHARED4, qid="a")
+    sched.submit(dataclass_replace_seed(SHARED4, 1), qid="b")
+    sched.tick()                   # both run ≥ 2 epochs → still leased
+    leases = {qid: lease.ids for qid, lease in sched._leases.items()}
+    assert set(leases) == {"a", "b"}
+    assert set(leases["a"]).isdisjoint(leases["b"])
+    assert pool.free == 0
+    sched.drain()
+    assert pool.free == 8       # every lease released at retirement
+    assert sched.results["a"].devices_leased == 4
+    assert sched.results["b"].devices_leased == 4
+
+
+def test_admission_queues_on_placement_wait_and_accounts_it():
+    """A full pool (not max_in_flight) is what blocks here — the query's
+    placement_wait_ticks must record that."""
+    pool = DevicePool(4)
+    sched = EpochScheduler(max_in_flight=8, pool=pool)
+    sched.submit(SHARED4, qid="first")
+    sched.submit(SessionSpec("wrs", "local", world=2, substrate="vmap"),
+                 qid="second")
+    sched.tick()
+    assert sched.in_flight == 1 and sched.pending == 1
+    sched.drain()
+    r = sched.results["second"]
+    assert r.placement_wait_ticks >= 1
+    assert r.placement_wait_ticks <= r.wait_ticks
+    # without a pool the column is identically 0
+    plain = EpochScheduler(max_in_flight=1)
+    plain.submit(SessionSpec("wrs", "local", world=2, substrate="vmap"),
+                 qid="q")
+    plain.drain()
+    assert plain.results["q"].placement_wait_ticks == 0
+    assert plain.results["q"].devices_leased == 0
+
+
+def test_results_bit_identical_to_solo_under_pool():
+    """Leasing/placement must not perturb any query's trajectory."""
+    est_ref, res_ref = _solo(SHARED4)
+    pool = DevicePool(8)
+    sched = EpochScheduler(max_in_flight=4, pool=pool)
+    sched.submit(SHARED4, qid="a")
+    sched.submit(dataclass_replace_seed(SHARED4, 1), qid="b")
+    sched.drain()
+    r = sched.results["a"]
+    assert r.tau == res_ref.num
+    np.testing.assert_array_equal(r.estimate, est_ref)
+
+
+def dataclass_replace_seed(spec, seed):
+    import dataclasses
+    return dataclasses.replace(spec, seed=seed)
+
+
+def test_submit_rejects_query_wider_than_pool():
+    sched = EpochScheduler(pool=DevicePool(2))
+    with pytest.raises(ValueError, match="never"):
+        sched.submit(SHARED4)
+
+
+def test_pressure_policy_requires_pool():
+    with pytest.raises(ValueError, match="pool"):
+        EpochScheduler(pressure=PressurePolicy())
+
+
+# --------------------------------------------------------- pressure elasticity
+
+def test_pressure_shrink_admits_queued_query_and_stays_bit_identical():
+    """Scheduler-initiated SHARED_FRAME shrink: queued demand exceeds free
+    devices → the widest shared session halves, the queued query admits,
+    and the shrunk session's (τ, estimate) is bit-identical to the
+    uninterrupted W=4 run — the PR-4 elastic certification extended to
+    reshards the *scheduler* decides on."""
+    est_ref, res_ref = _solo(SHARED4)
+    pool = DevicePool(4)
+    sched = EpochScheduler(max_in_flight=4, pool=pool,
+                           pressure=PressurePolicy(min_world=1))
+    sched.submit(SHARED4, qid="A")
+    sched.submit(SessionSpec("wrs", "local", world=2, substrate="vmap"),
+                 qid="B")
+    events = sched.drain()
+    reshards = [e for ev in events for e in ev.resharded]
+    assert ("A", 4, 2) in reshards
+    admit_tick = {qid: ev.tick for ev in events for qid in ev.admitted}
+    shrink_tick = next(ev.tick for ev in events if ev.resharded)
+    assert admit_tick["B"] == shrink_tick     # the shrink freed B's slots
+    rA = sched.results["A"]
+    assert rA.spec.world == 2 and rA.devices_leased == 4
+    assert rA.tau == res_ref.num
+    np.testing.assert_array_equal(rA.estimate, est_ref)
+
+
+def test_pressure_shrink_respects_min_world_and_strategy():
+    """LOCAL sessions never shrink; min_world floors the halving."""
+    pool = DevicePool(4)
+    sched = EpochScheduler(max_in_flight=4, pool=pool,
+                           pressure=PressurePolicy(min_world=4))
+    sched.submit(SHARED4, qid="A")           # min_world=4 → cannot halve
+    sched.submit(SessionSpec("wrs", "local", world=2, substrate="vmap"),
+                 qid="B")
+    events = sched.drain()
+    assert not any(ev.resharded for ev in events)
+    assert sched.results["A"].spec.world == 4
+    assert sched.results["B"].placement_wait_ticks >= 1
+
+
+def test_pressure_regrow_on_drained_queue_stays_bit_identical():
+    """A shrunk session grows back toward its logical width once the queue
+    drains and devices free up — still bit-identical to the solo run."""
+    est_ref, res_ref = _solo(SHARED4)
+    pool = DevicePool(4)
+    sched = EpochScheduler(max_in_flight=4, pool=pool,
+                           pressure=PressurePolicy(min_world=1, regrow=True))
+    sched.submit(SHARED4, qid="A")
+    sched.tick()                              # A leased 4, one epoch in
+    assert not sched._active["A"].done
+    sched._resize("A", 2)                     # as if an earlier tick shrank
+    assert pool.free == 2
+    events = sched.drain()
+    reshards = [e for ev in events for e in ev.resharded]
+    assert ("A", 2, 4) in reshards            # the regrow event
+    rA = sched.results["A"]
+    assert rA.spec.world == 4
+    assert rA.tau == res_ref.num
+    np.testing.assert_array_equal(rA.estimate, est_ref)
+
+
+def test_no_regrow_when_policy_disables_it():
+    pool = DevicePool(4)
+    sched = EpochScheduler(max_in_flight=4, pool=pool,
+                           pressure=PressurePolicy(min_world=1,
+                                                   regrow=False))
+    sched.submit(SHARED4, qid="A")
+    sched.tick()
+    if sched._active["A"].done:               # paranoia: needs a mid-run
+        pytest.skip("session too short to exercise regrow")
+    sched._resize("A", 2)
+    events = sched.drain()
+    assert not any(ev.resharded for ev in events)
+    assert sched.results["A"].spec.world == 2
+
+
+# ------------------------------------------------------- checkpoint + resume
+
+def test_scheduler_resume_with_pool_releases_and_reacquires(tmp_path):
+    """Preempt a pool-backed scheduler, resume with a *fresh* pool: leases
+    are re-acquired at admission and the results match the uninterrupted
+    reference bit-for-bit."""
+    est_ref, res_ref = _solo(SHARED4)
+    sched = EpochScheduler(max_in_flight=2, pool=DevicePool(8),
+                           checkpoint_dir=tmp_path)
+    sched.submit(SHARED4, qid="A")
+    sched.submit(SessionSpec("wrs", "local", world=2, substrate="vmap"),
+                 qid="B")
+    sched.tick()
+    sched.save_all()
+    resumed = EpochScheduler.resume(tmp_path, max_in_flight=2,
+                                    pool=DevicePool(8))
+    resumed.drain()
+    assert set(resumed.results) == {"A", "B"}
+    rA = resumed.results["A"]
+    assert rA.tau == res_ref.num
+    np.testing.assert_array_equal(rA.estimate, est_ref)
+    assert rA.devices_leased == 4
+    assert resumed.pool.free == 8
+
+
+def test_resume_skips_queries_wider_than_pool_without_aborting(tmp_path):
+    """A checkpointed W=4 session resumed onto a 2-slot pool cannot ever be
+    placed; resume() must skip it loudly (warning + sched.unresumed) and
+    still restore everything that fits."""
+    sched = EpochScheduler(max_in_flight=4, pool=DevicePool(8),
+                           checkpoint_dir=tmp_path)
+    sched.submit(SHARED4, qid="wide")
+    sched.submit(SessionSpec("wrs", "local", world=2, substrate="vmap"),
+                 qid="narrow")
+    sched.tick()
+    sched.save_all()
+    with pytest.warns(UserWarning, match="wide"):
+        resumed = EpochScheduler.resume(tmp_path, max_in_flight=4,
+                                        pool=DevicePool(2))
+    assert resumed.unresumed == ["wide"]
+    resumed.drain()
+    assert set(resumed.results) == {"narrow"}
+    # the skipped checkpoint stays on disk, resumable on an adequate pool
+    retry = EpochScheduler.resume(tmp_path, max_in_flight=4,
+                                  pool=DevicePool(8))
+    assert retry.unresumed == []
+    retry.drain()
+    assert "wide" in retry.results
+
+
+# --------------------------------------------------------------- subprocess
+# The real thing: disjoint shard_map submeshes need >1 device; force 8
+# virtual host devices in a child (the flag must precede the first jax
+# import and must not leak into this process).  When the parent already has
+# ≥ 8 devices (the CI serve-placement job), run the same checks in-process.
+
+_CHECKS_8DEV = """
+import numpy as np
+import jax
+from repro.serve import (AdaptiveSession, DevicePool, DeviceTopology,
+                         EpochScheduler, PressurePolicy, SessionSpec,
+                         StepperCache)
+
+SPEC = SessionSpec("reachability", "shared", world=4, substrate="shard_map")
+
+def solo(spec):
+    s = AdaptiveSession.create(spec).start().run()
+    est, res = s.result()
+    return np.asarray(est), res
+
+def check_concurrent_disjoint():
+    # reference: alone on the leading devices jax.devices()[:4]
+    est_ref, res_ref = solo(SPEC)
+    pool = DevicePool(DeviceTopology.from_host())
+    sched = EpochScheduler(max_in_flight=4, pool=pool)
+    sched.submit(SPEC, qid="a")
+    sched.submit(SPEC, qid="b")      # same shape, same seed — same answer
+    sched.tick()
+    pa = sched._active["a"].spec.placement
+    pb = sched._active["b"].spec.placement
+    assert pa == (0, 1, 2, 3) and pb == (4, 5, 6, 7), (pa, pb)
+    assert len(sched.cache) == 2, "same shape, disjoint submeshes must " \
+        "compile distinct steppers"
+    sched.drain()
+    for qid in ("a", "b"):
+        r = sched.results[qid]
+        assert r.tau == res_ref.num, (qid, r.tau, res_ref.num)
+        np.testing.assert_array_equal(r.estimate, est_ref)
+        assert r.devices_leased == 4
+
+def check_pressure_shrink_shard_map():
+    import dataclasses
+    est_ref, res_ref = solo(SPEC)
+    pool = DevicePool(8)
+    sched = EpochScheduler(max_in_flight=4, pool=pool,
+                           pressure=PressurePolicy(min_world=2))
+    sched.submit(SPEC, qid="A")
+    # another 3-epoch W=4 session so the pool stays full when C arrives
+    sched.submit(dataclasses.replace(SPEC, seed=1), qid="B")
+    sched.submit(SessionSpec("wrs", "local", world=2,
+                             substrate="shard_map"), qid="C")
+    events = sched.drain()
+    reshards = [e for ev in events for e in ev.resharded]
+    assert ("A", 4, 2) in reshards, reshards
+    rA = sched.results["A"]
+    assert rA.spec.world == 2
+    assert rA.spec.placement == (0, 1)      # kept the lease's leading half
+    assert rA.tau == res_ref.num
+    np.testing.assert_array_equal(rA.estimate, est_ref)
+    assert sched.results["C"].placement_wait_ticks >= 1
+
+def check_resume_releases_equivalent_devices(tmp):
+    est_ref, res_ref = solo(SPEC)
+    pool = DevicePool(8)
+    sched = EpochScheduler(max_in_flight=4, pool=pool, checkpoint_dir=tmp)
+    sched.submit(SPEC, qid="x")
+    sched.submit(SPEC, qid="y")
+    sched.tick()
+    assert sched._active["y"].spec.placement == (4, 5, 6, 7)
+    sched.save_all()
+    # fresh pool with devices 4,5 already taken: y cannot get its recorded
+    # submesh back and must be re-leased equivalent devices + rebound
+    pool2 = DevicePool(8)
+    blocker = pool2.lease(2, prefer=(4, 5))
+    resumed = EpochScheduler.resume(tmp, max_in_flight=4, pool=pool2)
+    resumed.drain()
+    for qid in ("x", "y"):
+        r = resumed.results[qid]
+        assert r.tau == res_ref.num
+        np.testing.assert_array_equal(r.estimate, est_ref)
+    py = resumed.results["y"].spec.placement
+    assert py is not None and set(py).isdisjoint(blocker.ids), py
+    px = resumed.results["x"].spec.placement
+    assert px == (0, 1, 2, 3), px     # recorded ids were free → re-leased
+"""
+
+_SCRIPT_8DEV = ("""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax
+assert len(jax.devices()) == 8
+""" + _CHECKS_8DEV + """
+check_concurrent_disjoint()
+check_pressure_shrink_shard_map()
+with tempfile.TemporaryDirectory() as tmp:
+    check_resume_releases_equivalent_devices(tmp)
+print("PLACEMENT_8DEV_OK")
+""")
+
+
+def _checks_namespace():
+    ns = {}
+    exec(compile(_CHECKS_8DEV, __file__ + "::_CHECKS_8DEV", "exec"), ns)
+    return ns
+
+
+needs_8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="disjoint W=4 submeshes need 8 devices (CI serve-placement job "
+           "runs these in-process; elsewhere the subprocess below covers "
+           "them)")
+
+
+@needs_8
+def test_concurrent_disjoint_sessions_bit_identical_to_solo():
+    _checks_namespace()["check_concurrent_disjoint"]()
+
+
+@needs_8
+def test_pressure_shrink_shard_map_bit_identical():
+    _checks_namespace()["check_pressure_shrink_shard_map"]()
+
+
+@needs_8
+def test_resume_re_leases_equivalent_devices(tmp_path):
+    _checks_namespace()["check_resume_releases_equivalent_devices"](
+        str(tmp_path))
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) >= 8,
+    reason="parent already runs the placement cells in-process (CI "
+           "serve-placement job) — the subprocess would just repeat them")
+def test_placement_under_forced_multidevice():
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT_8DEV],
+                       capture_output=True, text=True, env=env,
+                       timeout=900, cwd=ROOT)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    assert "PLACEMENT_8DEV_OK" in r.stdout
